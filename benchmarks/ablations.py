@@ -1,0 +1,61 @@
+"""Paper Tables 9-12 ablations:
+
+  Table 9   scoring:      cosine vs dot product
+  Table 10  aggregation:  max vs mean over the query axis
+  Table 11  B_CP sweep:   chunk size robustness
+  Table 12  N_Q sweep:    number of sub-selected queries
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, header
+from repro.configs.base import QuokaConfig
+from repro.core.chunked_prefill import key_recall, output_error
+from repro.data.synthetic import structured_qkv
+
+QKV = None
+
+
+def _qkv():
+    global QKV
+    if QKV is None:
+        QKV = structured_qkv(jax.random.PRNGKey(9), 2, 1024, 8, 2, 32,
+                             n_needles=48)
+    return QKV
+
+
+def _eval(cfg):
+    q, k, v = _qkv()
+    return (float(output_error(q, k, v, cfg, "quoka")),
+            float(key_recall(q, k, v, cfg, "quoka")))
+
+
+def run():
+    header("ablation: scoring (Table 9)")
+    for scoring in ("cosine", "dot"):
+        e, r = _eval(QuokaConfig(chunk_size=128, budget=128, n_queries=16,
+                                 keep_first=4, scoring=scoring))
+        emit(f"ablation_scoring/{scoring}", 0.0, f"err={e:.4f};recall={r:.3f}")
+
+    header("ablation: query aggregation (Table 10)")
+    for agg in ("max", "mean"):
+        e, r = _eval(QuokaConfig(chunk_size=128, budget=128, n_queries=16,
+                                 keep_first=4, query_agg=agg))
+        emit(f"ablation_agg/{agg}", 0.0, f"err={e:.4f};recall={r:.3f}")
+
+    header("ablation: chunk size B_CP (Table 11)")
+    for bcp in (64, 128, 256, 512):
+        e, r = _eval(QuokaConfig(chunk_size=bcp, budget=128,
+                                 n_queries=max(4, bcp // 8), keep_first=4))
+        emit(f"ablation_bcp/{bcp}", 0.0, f"err={e:.4f};recall={r:.3f}")
+
+    header("ablation: subselected queries N_Q (Table 12)")
+    for nq in (4, 8, 16, 32, 64, 128):
+        e, r = _eval(QuokaConfig(chunk_size=128, budget=128, n_queries=nq,
+                                 keep_first=4))
+        emit(f"ablation_nq/{nq}", 0.0, f"err={e:.4f};recall={r:.3f}")
+
+
+if __name__ == "__main__":
+    run()

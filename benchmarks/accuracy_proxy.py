@@ -1,0 +1,60 @@
+"""Paper Tables 1 (RULER) and 3 (LongBench) — accuracy proxies.
+
+No pretrained checkpoints are available offline, so accuracy is proxied at
+the attention level on the structured Figure-2 geometry (see
+data/synthetic.py): output relative error (eq. 4) and max-oracle key recall,
+across prompt lengths (Table 1 axis) and selection budgets (Table 3 axis).
+Lower err / higher recall == better; `derived` carries both.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, header
+from repro.configs.base import QuokaConfig
+from repro.core.chunked_prefill import (critical_key_recall, key_recall,
+                                        output_error)
+from repro.data.synthetic import structured_qkv
+
+METHODS = ("quoka", "sample_attention", "sparq", "loki", "less_is_more",
+           "snapkv", "keydiff")
+
+
+def run_lengths():
+    """Table 1 proxy: fixed budget, growing prompt length."""
+    header("accuracy vs length (Table 1 proxy, B_SA=128)")
+    for t in (512, 1024, 2048):
+        q, k, v = structured_qkv(jax.random.PRNGKey(3), 2, t, 8, 2, 32,
+                                 n_needles=max(16, t // 24))
+        cfg = QuokaConfig(chunk_size=128, budget=128, n_queries=16,
+                          keep_first=4)
+        for m in METHODS:
+            e = float(output_error(q, k, v, cfg, m))
+            r = float(key_recall(q, k, v, cfg, m))
+            c = float(critical_key_recall(q, k, v, cfg, m))
+            emit(f"ruler_proxy/T{t}/{m}", 0.0,
+                 f"err={e:.4f};recall={r:.3f};critical={c:.3f}")
+
+
+def run_budgets():
+    """Table 3 proxy: fixed length, shrinking selective budget."""
+    header("accuracy vs budget (Table 3 proxy, T=1024)")
+    q, k, v = structured_qkv(jax.random.PRNGKey(5), 2, 1024, 8, 2, 32,
+                             n_needles=48)
+    for budget in (64, 128, 256):
+        cfg = QuokaConfig(chunk_size=128, budget=budget, n_queries=16,
+                          keep_first=4)
+        for m in METHODS:
+            e = float(output_error(q, k, v, cfg, m))
+            r = float(key_recall(q, k, v, cfg, m))
+            emit(f"longbench_proxy/B{budget}/{m}", 0.0,
+                 f"err={e:.4f};recall={r:.3f}")
+
+
+def run():
+    run_lengths()
+    run_budgets()
+
+
+if __name__ == "__main__":
+    run()

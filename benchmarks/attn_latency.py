@@ -1,0 +1,43 @@
+"""Paper Figure 5(a)/(c): standalone attention-module latency across prompt
+lengths — dense chunked prefill vs QUOKA vs the strongest baselines.
+
+This container is a CPU host, matching the paper's Intel-Xeon setting
+(Fig 5c); `derived` reports the speedup over dense at each length.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, header, time_fn
+from repro.configs.base import QuokaConfig
+from repro.core.chunked_prefill import chunked_sparse_attention
+
+LENGTHS = (1024, 2048, 4096, 8192)
+METHODS = ("full", "quoka", "sample_attention", "sparq")
+H, NKV, D = 16, 4, 64           # qwen3-4b-ish head geometry (scaled)
+
+
+def run():
+    header("attn_latency (Fig 5a/c)")
+    key = jax.random.PRNGKey(0)
+    cfg = QuokaConfig(chunk_size=128, budget=1024, n_queries=16)
+    for t in LENGTHS:
+        q = jax.random.normal(key, (1, t, H, D), jnp.float32)
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, t, NKV, D))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (1, t, NKV, D))
+        base_us = None
+        for m in METHODS:
+            fn = jax.jit(functools.partial(
+                chunked_sparse_attention, cfg=cfg, method=m))
+            us = time_fn(fn, q, k, v, iters=3)
+            if m == "full":
+                base_us = us
+            emit(f"attn_latency/T{t}/{m}", us,
+                 f"speedup={base_us/us:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""Paper Table 4 + Appendix C: runtime & memory complexity of the scoring
+pass per method — analytic terms evaluated at llama3.2-3B dims, plus
+MEASURED scoring wall-clock to confirm the pre-aggregation factor n_q/n_kv.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, header, time_fn
+from repro.configs.base import QuokaConfig
+from repro.core import selection as sel_mod
+from repro.core.quoka import quoka_scores, subselect_queries
+
+# llama3.2-3B dims (paper's primary model)
+D, NQH, NKV, BCP, NQ, DL = 128, 24, 8, 128, 16, 64
+
+
+def analytic(t: int):
+    """Scoring-pass term counts from paper Table 4 (per layer, b=1)."""
+    return {
+        "quoka": ("runtime", BCP + (NQ * (1 + D * NKV)) * t,
+                  "memory", NKV * NQ * t),
+        "sample_attention": ("runtime",
+                             (D * NQH + NQH / NKV + NKV) * NQ * t,
+                             "memory", NQH * NQ * t),
+        "sparq": ("runtime", BCP * t * DL * NQH, "memory", NQH * BCP * t),
+        "loki": ("runtime", DL * NQH * (BCP * t + D * (BCP + t)),
+                 "memory", NQH * BCP * t),
+        "less_is_more": ("runtime", D * NQH * BCP * t / 28,
+                         "memory", NQH * BCP * t / 28),
+    }
+
+
+def run():
+    header("complexity (Table 4)")
+    t = 8192
+    for m, (_, rt, __, mem) in analytic(t).items():
+        emit(f"complexity_analytic/T{t}/{m}", 0.0,
+             f"runtime_terms={rt:.3e};memory_terms={mem:.3e}")
+
+    # measured: scoring-only wall clock, full-head vs pre-aggregated
+    key = jax.random.PRNGKey(0)
+    cfg = QuokaConfig(chunk_size=BCP, budget=1024, n_queries=NQ)
+    for t in (2048, 8192):
+        q = jax.random.normal(key, (1, BCP, NQH, D))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, t, NKV, D))
+        valid = jnp.ones((1, t), bool)
+
+        def quoka_fn(q, k, valid):
+            return quoka_scores(subselect_queries(q, NQ), k, valid, cfg)
+
+        us_q = time_fn(jax.jit(quoka_fn), q, k, valid)
+        us_s = time_fn(jax.jit(functools.partial(
+            sel_mod.sample_attention_scores, cfg=cfg)), q, k, valid)
+        emit(f"complexity_measured/T{t}/quoka_scoring", us_q,
+             f"vs_sample_attn={us_s/us_q:.2f}x (paper predicts ~n_q/n_kv="
+             f"{NQH/NKV:.1f}x)")
+        emit(f"complexity_measured/T{t}/sample_attn_scoring", us_s, "")
+
+
+if __name__ == "__main__":
+    run()

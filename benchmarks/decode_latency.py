@@ -1,0 +1,45 @@
+"""Paper Figure 6: decode-step latency with a long cached context —
+dense attention over the full cache vs QUOKA selection."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, header, time_fn
+from repro.configs import get_config
+from repro.models.model import build_model
+
+CACHE_LENS = (2048, 4096, 8192)
+
+
+def run():
+    header("decode_latency (Fig 6)")
+    cfg = get_config("qwen3-4b").smoke(n_layers=4, d_model=256, n_heads=8,
+                                       n_kv_heads=2, d_ff=512, vocab=2048)
+    cfg = dataclasses.replace(
+        cfg, quoka=dataclasses.replace(cfg.quoka, budget=512, chunk_size=128))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    for t in CACHE_LENS:
+        toks = jnp.asarray(rng.integers(3, cfg.vocab, (4, t)), jnp.int32)
+        cache = model.init_cache(4, t + 8)
+        _, cache = jax.jit(lambda p, b, c: model.prefill(p, b, c, "full"))(
+            params, {"tokens": toks}, cache)
+        tok = jnp.zeros((4,), jnp.int32)
+        base = None
+        for m in ("full", "quoka"):
+            step = jax.jit(
+                lambda p, tk, c, m=m: model.decode_step(p, tk, t, c, m))
+            us = time_fn(lambda p, tk, c: step(p, tk, c)[0],
+                         params, tok, cache, iters=5)
+            if m == "full":
+                base = us
+            emit(f"decode/T{t}/{m}", us, f"speedup={base/us:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""§Roofline: render the dry-run JSONs (experiments/dryrun/*.json) into the
+EXPERIMENTS.md table — three terms, dominant bottleneck, MODEL_FLOPS ratio.
+Run after `python -m repro.launch.dryrun --all --both-meshes`.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, header
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_rows(mesh: str = "16x16"):
+    """Canonical baseline artifacts only — §Perf iteration files carry a
+    `_perf*`/`_donate`/`_chunkwise`/`_full` suffix and are excluded."""
+    rows = {}
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        if not base.endswith("_" + mesh):
+            continue
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("mesh") == mesh:
+            rows[(r["arch"], r["shape"])] = r
+    return [rows[k] for k in sorted(rows)]
+
+
+def markdown_table(rows):
+    hdr = ("| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+           "bottleneck | useful | mem/chip (GB) |")
+    sep = "|" + "---|" * 8
+    out = [hdr, sep]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.2f} | "
+            f"{r['t_memory']*1e3:.2f} | {r['t_collective']*1e3:.2f} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.2f} | "
+            f"{r['bytes_per_chip']/1e9:.1f} |")
+    return "\n".join(out)
+
+
+def run():
+    header("roofline table (from dry-run artifacts)")
+    rows = load_rows("16x16")
+    if not rows:
+        emit("roofline/missing", 0.0, "run repro.launch.dryrun --all first")
+        return
+    print(markdown_table(rows))
+    for r in rows:
+        emit(f"roofline/{r['arch']}/{r['shape']}",
+             max(r["t_compute"], r["t_memory"], r["t_collective"]) * 1e6,
+             f"bottleneck={r['bottleneck']};useful={r['useful_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
+
+  attn_latency     Figure 5(a)/(c)  attention-module latency vs length
+  ttft             Figure 5(b)/(d)  end-to-end time-to-first-token
+  decode_latency   Figure 6         decode-step latency vs cache length
+  accuracy_proxy   Tables 1 & 3     RULER/LongBench attention-level proxies
+  niah             Figure 4         scratch-trained needle retrieval
+  ablations        Tables 9-12      scoring / aggregation / B_CP / N_Q
+  complexity       Table 4          analytic + measured scoring complexity
+  roofline_table   EXPERIMENTS §Roofline (from dry-run artifacts)
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmark names")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the slow trained-model NIAH benchmark")
+    args = ap.parse_args()
+
+    from benchmarks import (ablations, accuracy_proxy, attn_latency,
+                            complexity, decode_latency, niah, roofline_table,
+                            ttft)
+    todo = {
+        "attn_latency": attn_latency.run,
+        "ttft": ttft.run,
+        "decode_latency": decode_latency.run,
+        "accuracy_proxy": accuracy_proxy.run,
+        "ablations": ablations.run,
+        "complexity": complexity.run,
+        "niah": niah.run,
+        "roofline_table": roofline_table.run,
+    }
+    if args.fast:
+        todo.pop("niah")
+    if args.only:
+        keep = set(args.only.split(","))
+        todo = {k: v for k, v in todo.items() if k in keep}
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in todo.items():
+        try:
+            fn()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED benchmarks: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,43 @@
+"""Paper Figure 5(b)/(d): end-to-end time-to-first-token across prompt
+lengths (small model, B_CP=128 chunked prefill), dense vs QUOKA."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, header
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.serving.engine import Engine
+
+LENGTHS = (1024, 2048, 4096)
+
+
+def run():
+    header("ttft (Fig 5b/d)")
+    cfg = get_config("qwen3-4b").smoke(n_layers=4, d_model=256, n_heads=8,
+                                       n_kv_heads=2, d_ff=512, vocab=2048)
+    cfg = dataclasses.replace(
+        cfg, quoka=dataclasses.replace(cfg.quoka, chunk_size=128,
+                                       budget=256, n_queries=16))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    for t in LENGTHS:
+        toks = jnp.asarray(rng.integers(3, cfg.vocab, (1, t)), jnp.int32)
+        base = None
+        for m in ("full", "quoka"):
+            eng = Engine(model, params, method=m)
+            r = eng.generate({"tokens": toks}, 1)     # warm compile
+            r = eng.generate({"tokens": toks}, 1)
+            us = r.ttft_s * 1e6
+            if m == "full":
+                base = us
+            emit(f"ttft/T{t}/{m}", us, f"speedup={base/us:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

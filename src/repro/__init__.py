@@ -1,0 +1,4 @@
+"""repro — production-grade JAX reproduction of QUOKA (query-oriented KV
+selection for efficient LLM prefill) with multi-pod sharding, 10 assigned
+architectures, Pallas TPU kernels, and a chunked-prefill serving engine."""
+__version__ = "0.1.0"

@@ -1,0 +1,78 @@
+"""Parse collective traffic out of lowered/compiled HLO text.
+
+``cost_analysis`` has no collective term, so the roofline's third axis comes
+from summing the result-shape bytes of every collective op in the module
+(DESIGN/EXPERIMENTS: link-byte accounting per op):
+
+    all-gather          result bytes           (each chip receives ~result)
+    reduce-scatter      operand bytes ~ result * n  -> counted as result
+    all-reduce          2x result bytes        (RS + AG decomposition)
+    all-to-all          result bytes
+    collective-permute  result bytes
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_FACTOR = {"all-reduce": 2.0}
+
+# e.g.  %ag = bf16[2,128,4096]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\][^=]*?\s(" +
+    "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(")
+_TUPLE_RE = re.compile(
+    r"=\s*\((.*?)\)\s*(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Total result bytes per collective kind (×2 for all-reduce).
+    '-start' ops are counted, matching '-done' lines are skipped."""
+    out: Dict[str, float] = defaultdict(float)
+    for line in hlo_text.splitlines():
+        if "-done(" in line:          # avoid double-counting async pairs
+            continue
+        hit = None
+        for c in _COLLECTIVES:
+            if c in line:
+                hit = c
+                break
+        if hit is None:
+            continue
+        m = _OP_RE.search(line)
+        if m:
+            dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+            out[kind] += _shape_bytes(dtype, dims) * _FACTOR.get(kind, 1.0)
+            continue
+        m = _TUPLE_RE.search(line)
+        if m:
+            kind = m.group(2)
+            for dt, dims in _SHAPE_RE.findall(m.group(1)):
+                out[kind] += _shape_bytes(dt, dims) * _FACTOR.get(kind, 1.0)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def while_trip_counts(hlo_text: str):
+    """Best-effort trip counts of while loops (for FLOP sanity checks)."""
+    return [int(m.group(1)) for m in
+            re.finditer(r"trip_count[=:]\s*(\d+)", hlo_text)]

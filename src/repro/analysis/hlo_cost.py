@@ -1,0 +1,307 @@
+"""Trip-count-aware cost analysis over compiled (SPMD, per-device) HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits every computation ONCE — a
+``lax.scan`` over 61 layers or 256 prefill chunks is counted as a single
+iteration, which under-reports FLOPs/bytes by orders of magnitude (verified
+empirically; see EXPERIMENTS.md §Dry-run methodology).  Compiled HLO, however,
+annotates while ops with ``backend_config={"known_trip_count":{"n":...}}``.
+
+This module parses the HLO module text into computations, builds the call
+graph (while bodies/conds, fusions, conditionals), and accumulates:
+
+  * flops            — 2·prod(result)·contract for every ``dot``;
+                       counted inside fusion bodies too
+  * bytes            — operands + result per instruction, EXCLUDING
+                       instructions inside fusion bodies (the fusion op at
+                       the call site already accounts for its HBM traffic)
+                       — matching HloCostAnalysis "bytes accessed" semantics
+  * collective bytes — per kind, ×2 for all-reduce, async pairs deduped
+
+with while bodies multiplied by their known trip counts (nested loops
+compose).  All numbers are PER DEVICE, since the SPMD module is per-device.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "s2": 1, "u2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_AR_FACTOR = 2.0
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*{\s*$")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations={([^}]*)}")
+_TOAPPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":{"n":"(\d+)"')
+_OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape(text: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclass
+class Instr:
+    name: str
+    rhs: str
+    opcode: str
+    result_bytes: int
+    result_shape: Optional[Tuple[str, List[int]]]
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    shapes: Dict[str, Tuple[str, List[int]]] = field(default_factory=dict)
+    sizes: Dict[str, int] = field(default_factory=dict)
+
+
+_OPCODE_RE = re.compile(
+    r"^(?:\([^)]*\)|[a-z][a-z0-9]*\[[\d,]*\](?:{[^}]*})?)\s+([\w\-]+)")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR.match(line)
+        if hdr and line.endswith("{"):
+            cur = Computation(name=hdr.group(1))
+            comps[cur.name] = cur
+            if line.lstrip().startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        om = _OPCODE_RE.match(rhs)
+        opcode = om.group(1) if om else ""
+        shape = _first_shape(rhs.split(" ", 1)[0] if rhs.startswith("(")
+                             else rhs)
+        # result bytes: everything before the opcode token is the shape part
+        shape_part = rhs.split(opcode)[0] if opcode else rhs
+        rb = _shape_bytes(shape_part)
+        inst = Instr(name=name, rhs=rhs, opcode=opcode, result_bytes=rb,
+                     result_shape=shape)
+        cur.instrs.append(inst)
+        cur.shapes[name] = shape
+        cur.sizes[name] = rb
+    return comps, entry
+
+
+def _dot_flops(inst: Instr, comp: Computation) -> float:
+    """2 * prod(result dims) * prod(contracted dims of lhs)."""
+    ops = _operand_names(inst.rhs)
+    if not ops or inst.result_shape is None:
+        return 0.0
+    lhs = comp.shapes.get(ops[0])
+    if lhs is None:
+        return 0.0
+    cm = re.search(r"lhs_contracting_dims={([\d,]*)}", inst.rhs)
+    contract = 1
+    if cm:
+        for d in cm.group(1).split(","):
+            if d:
+                contract *= lhs[1][int(d)] if int(d) < len(lhs[1]) else 1
+    res = 1
+    for d in inst.result_shape[1]:
+        res *= d
+    return 2.0 * res * contract
+
+
+def _operand_names(rhs: str) -> List[str]:
+    m = _OPERANDS_RE.search(rhs[rhs.find("("):] if "(" in rhs else "")
+    if not m:
+        return []
+    names = []
+    for tok in m.group(1).split(","):
+        tok = tok.strip()
+        tm = re.match(r"%?([\w.\-]+)$", tok)
+        if tm:
+            names.append(tm.group(1))
+    return names
+
+
+_NO_BYTES = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             # structural ops: cost comes from recursing into their bodies
+             "while", "conditional", "call", "custom-call",
+             # async halves are bookkeeping
+             "all-gather-done", "all-reduce-done", "all-to-all-done",
+             "collective-permute-done", "async-done"}
+
+
+def _inst_bytes(inst: Instr, comp: Computation) -> float:
+    """HBM-traffic estimate per instruction, mirroring HloCostAnalysis:
+    in-place windowed updates count the WINDOW, not the aliased buffer
+    (scan carries would otherwise over-count by the trip count)."""
+    op = inst.opcode
+    if op in _NO_BYTES:
+        return 0.0
+    ops = _operand_names(inst.rhs)
+    if op == "dynamic-update-slice":
+        upd = comp.sizes.get(ops[1], 0) if len(ops) > 1 else inst.result_bytes
+        return 2.0 * upd
+    if op == "dynamic-slice" or op == "gather":
+        return 2.0 * inst.result_bytes
+    if op == "scatter":
+        upd = comp.sizes.get(ops[2], 0) if len(ops) > 2 else inst.result_bytes
+        return 2.0 * upd
+    if op == "fusion":
+        return -1.0          # sentinel: resolved in ModuleCost._fusion_bytes
+    operand_bytes = sum(comp.sizes.get(o, 0) for o in ops)
+    return float(inst.result_bytes + operand_bytes)
+
+
+class ModuleCost:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_module(text)
+        self._fusion_bodies = set()
+        for c in self.comps.values():
+            for inst in c.instrs:
+                if inst.opcode == "fusion":
+                    m = _CALLS_RE.search(inst.rhs)
+                    if m:
+                        self._fusion_bodies.add(m.group(1))
+        self._memo: Dict[str, Dict[str, float]] = {}
+
+    # ------------------------------------------------------------------
+    def _comp_cost(self, name: str, *, in_fusion: bool) -> Dict[str, float]:
+        key = f"{name}|{in_fusion}"
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(name)
+        acc: Dict[str, float] = defaultdict(float)
+        if comp is None:
+            return acc
+        for inst in comp.instrs:
+            op = inst.opcode
+            if op == "dot":
+                acc["flops"] += _dot_flops(inst, comp)
+            if not in_fusion:
+                nb = _inst_bytes(inst, comp)
+                acc["bytes"] += self._fusion_bytes(inst, comp) if nb < 0 else nb
+            # collectives (skip async -done halves)
+            for coll in _COLLECTIVES:
+                if op.startswith(coll) and not op.endswith("-done"):
+                    factor = _AR_FACTOR if coll == "all-reduce" else 1.0
+                    if not in_fusion:
+                        acc[f"coll_{coll}"] += inst.result_bytes * factor
+                    break
+            # recurse
+            if op == "while":
+                bm, cm = _BODY_RE.search(inst.rhs), _COND_RE.search(inst.rhs)
+                tm = _TRIP_RE.search(inst.rhs)
+                trips = int(tm.group(1)) if tm else 1
+                for sub in filter(None, [bm and bm.group(1),
+                                         cm and cm.group(1)]):
+                    subc = self._comp_cost(sub, in_fusion=in_fusion)
+                    for k, v in subc.items():
+                        acc[k] += v * trips
+            elif op == "fusion":
+                m = _CALLS_RE.search(inst.rhs)
+                if m:
+                    subc = self._comp_cost(m.group(1), in_fusion=True)
+                    acc["flops"] += subc.get("flops", 0.0)
+            elif op == "conditional":
+                bm = _BRANCH_RE.search(inst.rhs)
+                if bm:
+                    # worst-case branch
+                    best: Dict[str, float] = {}
+                    for br in re.findall(r"%?([\w.\-]+)", bm.group(1)):
+                        c = self._comp_cost(br, in_fusion=in_fusion)
+                        if c.get("flops", 0) >= best.get("flops", 0):
+                            best = c
+                    for k, v in best.items():
+                        acc[k] += v
+            elif op in ("call", "custom-call", "async-start"):
+                m = _CALLS_RE.search(inst.rhs) or _TOAPPLY_RE.search(inst.rhs)
+                if m and m.group(1) not in self._fusion_bodies:
+                    subc = self._comp_cost(m.group(1), in_fusion=in_fusion)
+                    for k, v in subc.items():
+                        acc[k] += v
+        self._memo[key] = dict(acc)
+        return self._memo[key]
+
+    def _fusion_bytes(self, inst: Instr, comp: Computation) -> float:
+        """Fusion traffic.  Fusions whose body slices/updates a window of a
+        big operand (scan xs/carry access patterns) count the WINDOW; plain
+        elementwise/reduce fusions count operands + result."""
+        m = _CALLS_RE.search(inst.rhs)
+        body = self.comps.get(m.group(1)) if m else None
+        if body is not None:
+            windowed = [bi for bi in body.instrs
+                        if bi.opcode in ("dynamic-slice",
+                                         "dynamic-update-slice", "gather",
+                                         "scatter")]
+            if windowed:
+                # a fusion rooted in a dynamic-update-slice is aliased with
+                # its operand buffer by XLA buffer assignment — the result is
+                # updated IN PLACE, so only the windows count, not the result
+                def _elems(shape):
+                    n = 1
+                    for dd in (shape[1] if shape else []):
+                        n *= dd
+                    return n
+                res_elems = _elems(inst.result_shape)
+                root_is_dus = any(
+                    bi.opcode == "dynamic-update-slice"
+                    and _elems(bi.result_shape) == res_elems
+                    for bi in body.instrs)
+                extra = 0.0 if root_is_dus else inst.result_bytes
+                return (sum(_inst_bytes(bi, body) for bi in windowed)
+                        + extra)
+        ops = _operand_names(inst.rhs)
+        return float(inst.result_bytes
+                     + sum(comp.sizes.get(o, 0) for o in ops))
+
+    def totals(self) -> Dict[str, float]:
+        if self.entry is None:
+            return {}
+        acc = dict(self._comp_cost(self.entry, in_fusion=False))
+        acc["coll_total"] = sum(v for k, v in acc.items()
+                                if k.startswith("coll_"))
+        return acc
+
+
+def analyze_text(text: str) -> Dict[str, float]:
+    return ModuleCost(text).totals()

@@ -1,0 +1,36 @@
+"""Architecture configs (assigned pool + the paper's own models).
+
+Importing this package registers every config module; access them through
+``repro.configs.get_config(name)`` / ``list_configs()``.
+"""
+from repro.configs.base import (EncoderConfig, FrontendConfig, MLAConfig,
+                                ModelConfig, MoEConfig, QuokaConfig,
+                                RWKVConfig, SSMConfig, get_config,
+                                list_configs, register)
+
+# assigned-pool architectures -------------------------------------------------
+from repro.configs import gemma3_27b        # noqa: F401
+from repro.configs import granite_3_2b      # noqa: F401
+from repro.configs import deepseek_v3_671b  # noqa: F401
+from repro.configs import stablelm_3b       # noqa: F401
+from repro.configs import internvl2_1b      # noqa: F401
+from repro.configs import whisper_small     # noqa: F401
+from repro.configs import rwkv6_1_6b        # noqa: F401
+from repro.configs import olmoe_1b_7b       # noqa: F401
+from repro.configs import h2o_danube_3_4b   # noqa: F401
+from repro.configs import zamba2_7b         # noqa: F401
+# the paper's own evaluation models -------------------------------------------
+from repro.configs import llama3_2_3b       # noqa: F401
+from repro.configs import qwen3_4b          # noqa: F401
+
+ASSIGNED = (
+    "gemma3-27b", "granite-3-2b", "deepseek-v3-671b", "stablelm-3b",
+    "internvl2-1b", "whisper-small", "rwkv6-1.6b", "olmoe-1b-7b",
+    "h2o-danube-3-4b", "zamba2-7b",
+)
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "RWKVConfig",
+    "EncoderConfig", "FrontendConfig", "QuokaConfig",
+    "get_config", "list_configs", "register", "ASSIGNED",
+]

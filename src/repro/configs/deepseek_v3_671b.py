@@ -1,0 +1,34 @@
+"""deepseek-v3-671b [moe] — MLA + 256-expert top-8 MoE + MTP. [arXiv:2412.19437]
+
+61L d_model=7168 128H (MLA; assignment lists kv=128) expert d_ff=2048
+vocab=129280.  First 3 layers use a dense FFN (18432, per the paper),
+remaining 58 layers use 1 shared + 256 routed experts, top-8.
+MLA: q_lora 1536, kv_lora 512, qk_nope 128, qk_rope 64, v 128 — the KV cache
+stores only the 512-d compressed latent + 64-d rope key per token.
+"""
+from repro.configs.base import (MLAConfig, ModelConfig, MoEConfig,
+                                QuokaConfig, register)
+
+
+@register
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-671b",
+        family="moe",
+        n_layers=61,
+        d_model=7168,
+        n_heads=128,
+        n_kv_heads=128,
+        d_ff=18432,                       # dense layers' FFN
+        vocab=129280,
+        layer_groups=((("mla",), 3), (("mla_moe",), 58)),
+        mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512,
+                      qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128),
+        moe=MoEConfig(n_experts=256, top_k=8, d_expert=2048, n_shared=1,
+                      dispatch="capacity"),
+        mtp=True,
+        rope_theta=10_000.0,
+        tie_embeddings=False,
+        quoka=QuokaConfig(chunk_size=128, budget=1024, n_queries=16),
+        source="arXiv:2412.19437",
+    )

@@ -1,0 +1,29 @@
+"""gemma3-27b [dense] — 5:1 local:global attention, 128k context.
+
+[hf:google/gemma-3-1b-pt family scaled per assignment]
+62L d_model=5376 32H (GQA kv=16) d_ff=21504 vocab=262144.
+Five sliding-window (1024) layers per one global layer; QUOKA applies on
+the global layers (local windows are already budget-bounded).
+"""
+from repro.configs.base import ModelConfig, QuokaConfig, register
+
+
+@register
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-27b",
+        family="dense",
+        n_layers=62,
+        d_model=5376,
+        n_heads=32,
+        n_kv_heads=16,
+        head_dim=128,
+        d_ff=21504,
+        vocab=262144,
+        sliding_window=1024,
+        layer_pattern=("attn_local",) * 5 + ("attn",),
+        rope_theta=1_000_000.0,
+        max_seq_len=131_072,
+        quoka=QuokaConfig(chunk_size=128, budget=2048, n_queries=16),
+        source="hf:google/gemma-3-1b-pt",
+    )

@@ -1,0 +1,28 @@
+"""h2o-danube-3-4b [dense] — llama+mistral mix with sliding-window attention.
+[arXiv:2401.16818]
+
+24L d_model=3840 32H (GQA kv=8) d_ff=10240 vocab=32000; mistral-style SWA
+(window 4096) on all layers.  QUOKA still applies inside the window when
+B_SA < window (budget 1024 < 4096).
+"""
+from repro.configs.base import ModelConfig, QuokaConfig, register
+
+
+@register
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="h2o-danube-3-4b",
+        family="dense",
+        n_layers=24,
+        d_model=3840,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=120,
+        d_ff=10240,
+        vocab=32000,
+        sliding_window=4096,
+        layer_pattern=("attn_local",),
+        rope_theta=10_000.0,
+        quoka=QuokaConfig(chunk_size=128, budget=1024, n_queries=16),
+        source="arXiv:2401.16818",
+    )

@@ -1,0 +1,28 @@
+"""internvl2-1b [vlm] — InternViT (stub) + InternLM2 decoder. [arXiv:2404.16821]
+
+24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151655.
+The vision frontend is a STUB per assignment: input_specs() provides
+precomputed patch embeddings (256 tokens, d=1024); the in-model projector
+(2-layer MLP) maps them into the LM embedding space.
+"""
+from repro.configs.base import (FrontendConfig, ModelConfig, QuokaConfig,
+                                register)
+
+
+@register
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-1b",
+        family="vlm",
+        n_layers=24,
+        d_model=896,
+        n_heads=14,
+        n_kv_heads=2,
+        head_dim=64,
+        d_ff=4864,
+        vocab=151655,
+        frontend=FrontendConfig(kind="vision", n_tokens=256, d_in=1024),
+        rope_theta=1_000_000.0,
+        quoka=QuokaConfig(chunk_size=128, budget=1024, n_queries=16),
+        source="arXiv:2404.16821",
+    )

@@ -1,0 +1,33 @@
+"""whisper-small [audio] — encoder-decoder; conv/mel frontend STUBBED.
+[arXiv:2212.04356]
+
+12L (decoder) d_model=768 12H (kv=12, MHA) d_ff=3072 vocab=51865; 12-layer
+encoder over 1500 stub frame embeddings.  Sinusoidal positions (NoPE w.r.t.
+rope).  QUOKA applies to decoder self-attention; cross-attention scoring is
+non-causal; the encoder is single-pass bidirectional (no cache).
+"""
+from repro.configs.base import (EncoderConfig, FrontendConfig, ModelConfig,
+                                QuokaConfig, register)
+
+
+@register
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-small",
+        family="audio",
+        n_layers=12,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=12,
+        head_dim=64,
+        d_ff=3072,
+        vocab=51865,
+        layer_pattern=("dec_cross",),
+        encoder=EncoderConfig(n_layers=12, n_ctx=1500),
+        frontend=FrontendConfig(kind="audio", n_tokens=1500, d_in=768),
+        use_rope=False,
+        act="gelu",
+        tie_embeddings=True,
+        quoka=QuokaConfig(chunk_size=128, budget=512, n_queries=16),
+        source="arXiv:2212.04356",
+    )

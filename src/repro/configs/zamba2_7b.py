@@ -1,0 +1,29 @@
+"""zamba2-7b [hybrid] — Mamba2 backbone + shared attention block.
+[arXiv:2411.15242]
+
+81L d_model=3584 32H (GQA kv=32) d_ff=14336 ssm_state=64.  Every 6th layer
+additionally applies the single SHARED attention+MLP block (weight sharing
+falls out of scanning with the shared params closed over).  QUOKA applies
+to the shared attention block's KV cache; Mamba2 blocks are attention-free.
+"""
+from repro.configs.base import ModelConfig, QuokaConfig, SSMConfig, register
+
+
+@register
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-7b",
+        family="hybrid",
+        n_layers=81,
+        d_model=3584,
+        n_heads=32,
+        n_kv_heads=32,
+        head_dim=112,
+        d_ff=14336,
+        vocab=32000,
+        layer_pattern=("mamba",) * 5 + ("mamba_shared_attn",),
+        ssm=SSMConfig(d_state=64, d_conv=4, expand=2, head_dim=64),
+        rope_theta=10_000.0,
+        quoka=QuokaConfig(chunk_size=128, budget=1024, n_queries=16),
+        source="arXiv:2411.15242",
+    )

@@ -1,0 +1,2 @@
+"""The paper's contribution: QUOKA selection (quoka.py), competing selection
+baselines (selection.py), and the chunked-prefill harness."""

@@ -1,0 +1,141 @@
+"""Dense (masked) attention reference with GQA, used everywhere the Pallas
+kernel is not (CPU smoke tests, XLA path, and as the oracle for kernels).
+
+Layout convention: activations are (batch, time, heads, head_dim) — "BTHD".
+Masks are derived from *position arrays* rather than offsets: every cached
+key carries its absolute position (or -1 when the slot is empty), so causal,
+sliding-window and gathered/selected caches all use the same code path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import ctx as shctx
+
+NEG_INF = -1e30
+
+
+def position_mask(q_pos, k_pos, *, causal: bool = True,
+                  window: Optional[int] = None):
+    """Boolean attention mask from absolute positions.
+
+    q_pos: (b, tq) int32; k_pos: (b, tk) int32, -1 marks an invalid slot.
+    Returns (b, 1, tq, tk) bool (True = attend).
+    """
+    q = q_pos[:, :, None]            # (b, tq, 1)
+    k = k_pos[:, None, :]            # (b, 1, tk)
+    m = k >= 0
+    if causal:
+        m = m & (k <= q)
+    if window is not None:
+        m = m & (k > q - window)
+    return m[:, None, :, :]
+
+
+def dense_attention(q, k, v, mask=None, *, scale: Optional[float] = None,
+                    soft_cap: Optional[float] = None):
+    """Masked softmax attention with GQA.
+
+    q: (b, tq, n_q, d); k, v: (b, tk, n_kv, d); n_q % n_kv == 0.
+    mask: bool (True = attend), shape (b, H, tq, tk) with H in {1, n_kv, n_q}.
+    Returns (b, tq, n_q, dv).
+
+    GQA uses the FLAT-HEAD form (kv repeated to n_q heads) rather than a
+    (n_kv, group) reshape: the flat head axis tensor-shards over `model`
+    even when n_kv < |model| (e.g. granite 32H/8KV on a 16-way axis), which
+    the grouped form cannot express without resharding every layer.
+    """
+    b, tq, n_q, d = q.shape
+    _, tk, n_kv, _ = k.shape
+    group = n_q // n_kv
+    scale = (d ** -0.5) if scale is None else scale
+    kr = jnp.repeat(k, group, axis=2) if group > 1 else k
+    vr = jnp.repeat(v, group, axis=2) if group > 1 else v
+
+    logits = jnp.einsum("bthd,bshd->bhts", q, kr,
+                        preferred_element_type=jnp.float32) * scale
+    if soft_cap is not None:
+        logits = soft_cap * jnp.tanh(logits / soft_cap)
+    if mask is not None:
+        h = mask.shape[1]
+        if h == n_kv and n_kv not in (1, n_q):
+            mask = jnp.repeat(mask, group, axis=1)
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    if mask is not None:
+        # fully-masked rows: softmax over NEG_INF is uniform garbage — zero
+        # them, matching blocked_attention and the Pallas kernel (l == 0)
+        probs = jnp.where(mask.any(-1, keepdims=True), probs, 0.0)
+    out = jnp.einsum("bhts,bshd->bthd", probs.astype(vr.dtype), vr)
+    return out
+
+
+BLOCKED_THRESHOLD = 2048   # switch to online-softmax streaming above this
+BLOCK_K = 1024
+
+
+def blocked_attention(q, k, v, q_pos, k_pos, *, causal=True, window=None,
+                      scale=None, block_k: int = BLOCK_K):
+    """Memory-efficient attention: lax.scan over key blocks with an online
+    softmax (Rabe & Staats / flash semantics) in pure XLA ops.
+
+    This is the compile-anywhere twin of kernels/flash_attention.py — the
+    (tq × tk) score matrix is never materialised, so the HBM roofline term
+    stays linear in tk.  The key-block loop body is rematerialised
+    (jax.checkpoint), so the backward pass recomputes block scores instead
+    of saving them.
+    """
+    b, tq, n_q, d = q.shape
+    tk, n_kv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    group = n_q // n_kv
+    scale = (d ** -0.5) if scale is None else scale
+    block_k = min(block_k, tk)
+    pad = (-tk) % block_k
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        k, v = zf(k), zf(v)
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+    nb = k.shape[1] // block_k
+    ks = k.reshape(b, nb, block_k, n_kv, d).swapaxes(0, 1)
+    vs = v.reshape(b, nb, block_k, n_kv, dv).swapaxes(0, 1)
+    ps = k_pos.reshape(b, nb, block_k).swapaxes(0, 1)
+    qf = shctx.shard_heads(q.astype(jnp.float32) * scale, 2)  # (b,tq,h,d)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        kb, vb, pb = xs
+        if group > 1:
+            kb = jnp.repeat(kb, group, axis=2)
+            vb = jnp.repeat(vb, group, axis=2)
+        s = jnp.einsum("bthd,bshd->bhts", qf, kb.astype(jnp.float32))
+        mask = position_mask(q_pos, pb, causal=causal, window=window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhts,bshd->bhtd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    init = (shctx.shard_heads(jnp.full((b, n_q, tq), NEG_INF, jnp.float32), 1),
+            shctx.shard_heads(jnp.zeros((b, n_q, tq), jnp.float32), 1),
+            shctx.shard_heads(jnp.zeros((b, n_q, tq, dv), jnp.float32), 1))
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), init, (ks, vs, ps))
+    safe = jnp.where(l > 0, l, 1.0)
+    out = jnp.where((l > 0)[..., None], acc / safe[..., None], 0.0)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attention_with_positions(q, k, v, q_pos, k_pos, *, causal=True,
+                             window=None, soft_cap=None):
+    tk = k.shape[1]
+    if soft_cap is None and tk > BLOCKED_THRESHOLD:
+        return blocked_attention(q, k, v, q_pos, k_pos, causal=causal,
+                                 window=window)
+    mask = position_mask(q_pos, k_pos, causal=causal, window=window)
+    return dense_attention(q, k, v, mask, soft_cap=soft_cap)

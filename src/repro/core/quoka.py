@@ -1,0 +1,167 @@
+"""QUOKA — Query-oriented KV selection (paper Algorithm 1).
+
+Three stages, all standard linear algebra (the paper's portability claim):
+
+  1. *Query subselection* — keep the ``N_Q`` queries most cosine-DISSIMILAR
+     to the mean query of the chunk (Theorem 1: those dominate attention).
+  2. *Cosine-similarity scoring* — score the kept (normalised) queries
+     against normalised cached keys.
+  3. *Group-aware aggregation* — **max** over the query axis (preserves
+     heavy-tailed outliers, Table 10) and **mean** over GQA groups, applied
+     as *pre-aggregation*: normalised queries are averaged inside each KV
+     group BEFORE the ``Q̄Kᵀ`` matmul (linearity), cutting score cost by
+     ``n_q/n_kv`` (paper §3.3, Table 4).
+
+Layouts: q (b, t, n_q_heads, d); k/v caches (b, T, n_kv, d);
+key positions (b, T) int32 with -1 marking empty slots.
+Scores are fp32; ``NEG_INF`` marks un-selectable slots.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import QuokaConfig
+from repro.core.attention import NEG_INF
+from repro.models.layers import l2_normalize
+
+
+class Selected(NamedTuple):
+    """A gathered KV budget.  Positions are per-KV-head (b, n_kv, B);
+    -1 marks padding (fewer valid KVs than the budget)."""
+    k: jax.Array          # (b, B, n_kv, d)
+    v: jax.Array          # (b, B, n_kv, d)
+    pos: jax.Array        # (b, n_kv, B) int32
+    idx: jax.Array        # (b, n_kv, B) int32 cache slots (for analysis)
+
+
+# ----------------------------------------------------------------------------
+# stage 1: query subselection
+# ----------------------------------------------------------------------------
+
+def subselect_queries(q: jax.Array, n_queries: int) -> jax.Array:
+    """Keep the ``n_queries`` queries with lowest CosSim to the mean query.
+
+    q: (b, t, h, d)  ->  (b, n_queries, h, d), independently per (b, h).
+    When t <= n_queries the input is returned unchanged (Algorithm 1 line 1).
+    """
+    b, t, h, d = q.shape
+    if t <= n_queries:
+        return q
+    qf = q.astype(jnp.float32)
+    mq = jnp.mean(qf, axis=1, keepdims=True)                     # (b, 1, h, d)
+    num = jnp.sum(qf * mq, axis=-1)
+    den = (jnp.linalg.norm(qf, axis=-1) * jnp.linalg.norm(mq, axis=-1) + 1e-8)
+    s_q = -(num / den)                                           # (b, t, h)
+    _, top_i = jax.lax.top_k(s_q.transpose(0, 2, 1), n_queries)  # (b, h, N_Q)
+    gathered = jnp.take_along_axis(
+        q.transpose(0, 2, 1, 3), top_i[..., None], axis=2)       # (b, h, N_Q, d)
+    return gathered.transpose(0, 2, 1, 3)
+
+
+# ----------------------------------------------------------------------------
+# stages 2+3: cosine scoring with GQA pre-aggregation, max over queries
+# ----------------------------------------------------------------------------
+
+def quoka_scores(q: jax.Array, k: jax.Array, valid: jax.Array,
+                 cfg: QuokaConfig) -> jax.Array:
+    """Paper Algorithm 1 lines 6-10.
+
+    q: (b, N_Q, n_q_heads, d) already sub-selected; k: (b, T, n_kv, d);
+    valid: (b, T) bool (selectable prior-context slots).
+    Returns fp32 scores (b, n_kv, T), NEG_INF on invalid slots.
+    """
+    b, nq, h, d = q.shape
+    n_kv = k.shape[2]
+    group = h // n_kv
+
+    if cfg.scoring == "cosine":
+        qn = l2_normalize(q.astype(jnp.float32))
+    elif cfg.scoring == "dot":                     # Table 9 ablation arm
+        qn = q.astype(jnp.float32)
+    else:
+        raise ValueError(cfg.scoring)
+
+    # pre-aggregation: mean of (normalised) queries inside each KV group
+    qbar = jnp.mean(qn.reshape(b, nq, n_kv, group, d), axis=3)   # (b,N_Q,n_kv,d)
+    # FUSED key normalisation (§Perf A1): scores are divided by per-key norms
+    # instead of materialising a normalised (fp32!) copy of the whole K cache
+    # — K is streamed once, in its storage dtype, by a single einsum.  This
+    # is the XLA twin of the kernels/quoka_score.py in-VMEM normalisation.
+    # NOTE (§Perf A7): scoring is embarrassingly parallel over the KEY axis,
+    # and when n_kv < |model| (granite kv=8 on 16-way TP) it under-shards.
+    # Constraining the score tensor's T axis over `model` was measured at
+    # 60 TB/chip of all-gather — XLA reshards the whole K cache to satisfy
+    # the second layout.  A T-local scoring pass needs the CACHE stored
+    # score-major (or a shard_map with a layout-local kernel); left as
+    # documented future work.
+    s = jnp.einsum("bnkd,btkd->bknt", qbar.astype(k.dtype), k,
+                   preferred_element_type=jnp.float32)           # (b,n_kv,N_Q,T)
+    if cfg.scoring == "cosine":
+        # self-dot via einsum: bf16 reads, fp32 accumulation — no converted
+        # copy of K is ever materialised (an astype(f32) here caused XLA to
+        # hoist a full-cache f32 conversion across the prefill loop)
+        sq = jnp.einsum("btkd,btkd->btk", k, k,
+                        preferred_element_type=jnp.float32)
+        inv = jax.lax.rsqrt(sq + 1e-16)                          # (b,T,n_kv)
+        s = s * inv.transpose(0, 2, 1)[:, :, None, :]
+
+    if cfg.query_agg == "max":                     # Table 10: max >> mean
+        s_hat = jnp.max(s, axis=2)
+    elif cfg.query_agg == "mean":
+        s_hat = jnp.mean(s, axis=2)
+    else:
+        raise ValueError(cfg.query_agg)
+
+    return jnp.where(valid[:, None, :], s_hat, NEG_INF)
+
+
+# ----------------------------------------------------------------------------
+# topk + gather (Algorithm 1 lines 11-12) — shared by every scoring method
+# ----------------------------------------------------------------------------
+
+def select_topk(scores: jax.Array, k: jax.Array, v: jax.Array,
+                key_pos: jax.Array, budget: int, *,
+                keep_first: int = 0) -> Selected:
+    """Gather the ``budget`` best KVs per (batch, kv-head).
+
+    scores: (b, n_kv, T) fp32 with NEG_INF on invalid slots.
+    k, v: (b, T, n_kv, d); key_pos: (b, T).
+    """
+    b, n_kv, t = scores.shape
+    budget = min(budget, t)
+    if keep_first:
+        # sink protection: force-keep the first `keep_first` real tokens
+        sink = (key_pos >= 0) & (key_pos < keep_first)           # (b, T)
+        scores = jnp.where(sink[:, None, :] & (scores > NEG_INF / 2),
+                           jnp.inf, scores)
+    top_s, top_i = jax.lax.top_k(scores, budget)                 # (b, n_kv, B)
+    good = top_s > NEG_INF / 2
+
+    # gather along the TIME axis directly — transposing the K/V caches first
+    # would materialise a full-cache copy per chunk per layer (§Perf A5)
+    idx_t = top_i.transpose(0, 2, 1)[..., None]                  # (b,B,n_kv,1)
+    k_sel = jnp.take_along_axis(k, idx_t, axis=1)                # (b,B,n_kv,d)
+    v_sel = jnp.take_along_axis(v, idx_t, axis=1)
+    pos = jnp.take_along_axis(
+        jnp.broadcast_to(key_pos[:, None, :], scores.shape), top_i, axis=2)
+    pos = jnp.where(good, pos, -1)
+    return Selected(k=k_sel, v=v_sel,
+                    pos=pos, idx=jnp.where(good, top_i, -1))
+
+
+def quoka_select(q: jax.Array, k: jax.Array, v: jax.Array,
+                 key_pos: jax.Array, chunk_start, cfg: QuokaConfig,
+                 budget: Optional[int] = None) -> Selected:
+    """Full Algorithm 1: subselect queries, score, topk-gather.
+
+    ``chunk_start`` may be traced (scan carry); selection considers only
+    slots with 0 <= pos < chunk_start (the prior context, eq. (2)).
+    """
+    qs = subselect_queries(q, cfg.n_queries)
+    valid = (key_pos >= 0) & (key_pos < chunk_start)
+    scores = quoka_scores(qs, k, valid, cfg)
+    return select_topk(scores, k, v, key_pos, budget or cfg.budget,
+                       keep_first=cfg.keep_first)

@@ -1,0 +1,186 @@
+"""Sparse-attention selection baselines the paper compares against (§4).
+
+All methods share QUOKA's interface: produce fp32 relevance scores
+(b, n_kv, T) over the cached keys, then reuse ``select_topk``.  This keeps
+the comparison honest — only the *scoring policy* differs.
+
+  sample_attention  Zhu et al. 2024      — uniformly sampled queries, true
+                                           softmax logits, mean aggregation
+  sparq             Ribar et al. 2024    — top-|q| channel subselection,
+                                           dot scores, mean aggregation
+  loki              Singhania et al.2024 — low-rank projected q/k dot scores
+                                           (random projection stands in for
+                                           the offline PCA; documented)
+  less_is_more      Yang et al. 2025b    — scores only every k-th layer,
+                                           indices re-used in between (the
+                                           reuse is driven by the engine)
+  snapkv            Li et al. 2024       — last-window observation queries,
+                                           pooled softmax mass (eviction
+                                           policy used as a selector)
+  keydiff           Park et al. 2025     — query-free: key dissimilarity
+                                           from the mean key
+  quoka             this paper
+  full              dense attention      — engine bypasses selection
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import QuokaConfig
+from repro.core.attention import NEG_INF
+from repro.core.quoka import Selected, quoka_select, select_topk, quoka_scores, subselect_queries
+from repro.models.layers import l2_normalize
+
+METHODS = ("quoka", "sample_attention", "sparq", "loki", "less_is_more",
+           "snapkv", "keydiff", "full")
+
+
+def _group_mean_q(q, n_kv):
+    """(b, t, h, d) -> (b, t, n_kv, d) mean over the GQA group axis."""
+    b, t, h, d = q.shape
+    return jnp.mean(q.reshape(b, t, n_kv, h // n_kv, d), axis=3)
+
+
+def _mask(scores, valid):
+    return jnp.where(valid[:, None, :], scores, NEG_INF)
+
+
+# ---------------------------------------------------------------------------
+# scoring policies
+# ---------------------------------------------------------------------------
+
+def sample_attention_scores(q, k, valid, cfg: QuokaConfig):
+    """Uniform query sampling + softmax-logit scores, mean aggregated."""
+    b, t, h, d = q.shape
+    n_kv = k.shape[2]
+    n = min(cfg.n_queries, t)
+    idx = jnp.linspace(0, t - 1, n).astype(jnp.int32)            # uniform
+    qs = q[:, idx].astype(jnp.float32)                           # (b, n, h, d)
+    # per *attention* head logits (the method does NOT pre-aggregate; this is
+    # exactly the n_q-vs-n_kv cost difference of paper Table 4)
+    kr = jnp.repeat(k.astype(jnp.float32), h // n_kv, axis=2)    # (b, T, h, d)
+    logits = jnp.einsum("bnhd,bthd->bhnt", qs, kr) / jnp.sqrt(float(d))
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)                      # (b, h, n, T)
+    s = probs.mean(axis=2)                                       # mean over queries
+    s = s.reshape(b, n_kv, h // n_kv, -1).mean(axis=2)           # mean over group
+    return _mask(s, valid)
+
+
+def sparq_scores(q, k, valid, cfg: QuokaConfig):
+    """Top-r |q| channels, dot-product scores, mean aggregation."""
+    n_kv = k.shape[2]
+    r = min(cfg.rank, q.shape[-1])
+    qg = _group_mean_q(q.astype(jnp.float32), n_kv)              # (b, t, n_kv, d)
+    imp = jnp.mean(jnp.abs(qg), axis=1)                          # (b, n_kv, d)
+    _, ch = jax.lax.top_k(imp, r)                                # (b, n_kv, r)
+    qc = jnp.take_along_axis(qg.transpose(0, 2, 1, 3),
+                             ch[:, :, None, :], axis=3)          # (b,n_kv,t,r)
+    kc = jnp.take_along_axis(k.astype(jnp.float32).transpose(0, 2, 1, 3),
+                             ch[:, :, None, :], axis=3)          # (b,n_kv,T,r)
+    s = jnp.einsum("bktr,bksr->bkts", qc, kc).mean(axis=2)       # mean over queries
+    return _mask(s, valid)
+
+
+def loki_scores(q, k, valid, cfg: QuokaConfig, proj: Optional[jax.Array] = None):
+    """Low-rank projected dot scores.  ``proj`` (d, rank): offline PCA in the
+    original; a fixed random projection stands in here (JL-style)."""
+    n_kv = k.shape[2]
+    d = q.shape[-1]
+    r = min(cfg.rank, d)
+    if proj is None:
+        proj = jax.random.normal(jax.random.PRNGKey(7), (d, r),
+                                 jnp.float32) / jnp.sqrt(float(r))
+    qg = _group_mean_q(q.astype(jnp.float32), n_kv) @ proj       # (b,t,n_kv,r)
+    kl = k.astype(jnp.float32).transpose(0, 2, 1, 3) @ proj      # (b,n_kv,T,r)
+    s = jnp.einsum("btkr,bksr->bkts", qg, kl).mean(axis=2)       # mean over q
+    return _mask(s, valid)
+
+
+def less_is_more_scores(q, k, valid, cfg: QuokaConfig):
+    """Last-window mean-aggregated dot scores (per-layer reuse is applied by
+    the engine, which only *calls* this on scoring layers)."""
+    n_kv = k.shape[2]
+    w = min(cfg.n_queries, q.shape[1])
+    qg = _group_mean_q(q[:, -w:].astype(jnp.float32), n_kv)
+    s = jnp.einsum("btkd,bskd->bkts", qg,
+                   k.astype(jnp.float32)).mean(axis=2)
+    return _mask(s, valid)
+
+
+def snapkv_scores(q, k, valid, cfg: QuokaConfig, pool: int = 7):
+    """Observation-window softmax mass, 1D max-pooled (SnapKV §3)."""
+    b, t, h, d = q.shape
+    n_kv = k.shape[2]
+    w = min(16, t)
+    kr = jnp.repeat(k.astype(jnp.float32), h // n_kv, axis=2)
+    logits = jnp.einsum("bnhd,bthd->bhnt", q[:, -w:].astype(jnp.float32),
+                        kr) / jnp.sqrt(float(d))
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    s = jax.nn.softmax(logits, axis=-1).sum(axis=2)              # (b, h, T)
+    s = s.reshape(b, n_kv, h // n_kv, -1).mean(axis=2)
+    # 1D max pooling over the key axis (preserve clusters)
+    pad = pool // 2
+    sp = jnp.pad(s, ((0, 0), (0, 0), (pad, pad)), constant_values=0.0)
+    s = jax.lax.reduce_window(sp, -jnp.inf, jax.lax.max,
+                              (1, 1, pool), (1, 1, 1), "valid")
+    return _mask(s, valid)
+
+
+def keydiff_scores(q, k, valid, cfg: QuokaConfig):
+    """Query-free: keys most dissimilar from the mean key are kept."""
+    del q
+    kf = k.astype(jnp.float32)
+    kn = l2_normalize(kf)
+    denom = jnp.maximum(jnp.sum(valid, axis=1, keepdims=True), 1)
+    mean_k = jnp.sum(jnp.where(valid[:, :, None, None], kn, 0.0), axis=1,
+                     keepdims=True) / denom[:, :, None, None]
+    s = -jnp.sum(kn * l2_normalize(mean_k), axis=-1)             # (b, T, n_kv)
+    return _mask(s.transpose(0, 2, 1), valid)
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def compute_scores(method: str, q, k, valid, cfg: QuokaConfig):
+    if method == "quoka":
+        return quoka_scores(subselect_queries(q, cfg.n_queries), k, valid, cfg)
+    if method == "sample_attention":
+        return sample_attention_scores(q, k, valid, cfg)
+    if method == "sparq":
+        return sparq_scores(q, k, valid, cfg)
+    if method == "loki":
+        return loki_scores(q, k, valid, cfg)
+    if method == "less_is_more":
+        return less_is_more_scores(q, k, valid, cfg)
+    if method == "snapkv":
+        return snapkv_scores(q, k, valid, cfg)
+    if method == "keydiff":
+        return keydiff_scores(q, k, valid, cfg)
+    raise ValueError(f"unknown selection method {method!r}")
+
+
+def resolve_budget(cfg: QuokaConfig, context_len: int) -> int:
+    """Effective B_SA: fixed, or a fraction of the (static) context length
+    (paper Table 2 runs B_SA = 25% of the cache)."""
+    if cfg.budget_ratio is not None:
+        return max(cfg.keep_first + 1,
+                   int(cfg.budget_ratio * context_len))
+    return cfg.budget
+
+
+def select(method: str, q, k, v, key_pos, chunk_start, cfg: QuokaConfig,
+           budget: Optional[int] = None) -> Selected:
+    """Score + topk-gather for any method (``full`` must be handled by the
+    caller — it means 'do not select')."""
+    budget = budget or resolve_budget(cfg, k.shape[1])
+    if method == "quoka":
+        return quoka_select(q, k, v, key_pos, chunk_start, cfg, budget)
+    valid = (key_pos >= 0) & (key_pos < chunk_start)
+    scores = compute_scores(method, q, k, valid, cfg)
+    return select_topk(scores, k, v, key_pos, budget,
+                       keep_first=cfg.keep_first)

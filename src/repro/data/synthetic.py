@@ -1,0 +1,160 @@
+"""Synthetic data: (a) an LM stream with induction structure (trainable
+signal), (b) a needle-in-a-haystack retrieval task (the NIAH/RULER proxy for
+EXPERIMENTS.md §Claims), and (c) structured Q/K/V generators reproducing the
+query-key geometry the paper observes (Figure 2) for the attention-level
+accuracy benchmarks.
+
+Token map for (a)/(b):  0 PAD · 1 NEEDLE · 2 QUERY · [3, 3+n_keys) key ids ·
+[3+n_keys, 3+2·n_keys) value ids · rest filler.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PAD, NEEDLE, QUERY = 0, 1, 2
+
+
+# ---------------------------------------------------------------------------
+# (a) LM stream with copy/induction structure
+# ---------------------------------------------------------------------------
+
+def lm_batches(key, vocab: int, batch: int, seq: int,
+               repeat_frac: float = 0.3) -> Iterator[Dict]:
+    """Infinite stream: random tokens where the 2nd half repeats spans of the
+    1st half with prob `repeat_frac` — learnable induction signal."""
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    while True:
+        toks = rng.integers(3, vocab, size=(batch, seq))
+        half = seq // 2
+        for b in range(batch):
+            if rng.random() < repeat_frac and half > 8:
+                span = rng.integers(4, min(64, half))
+                src = rng.integers(0, half - span)
+                dst = rng.integers(half, seq - span)
+                toks[b, dst:dst + span] = toks[b, src:src + span]
+        yield {"tokens": jnp.asarray(toks, jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# (b) needle retrieval (NIAH proxy)
+# ---------------------------------------------------------------------------
+
+def needle_batch(rng: np.random.Generator, vocab: int, batch: int, seq: int,
+                 n_keys: int = 32, depth: float | None = None,
+                 n_distractors: int = 0) -> Dict:
+    """[filler... NEEDLE k v ... QUERY k v] — the model must emit v after
+    (QUERY, k).  `n_distractors` extra (NEEDLE k' v') pairs with DIFFERENT
+    keys are inserted (RULER multi-key style): the model must retrieve the
+    right one, and a KV selector must keep several critical regions alive.
+    loss_mask marks only the answer position; `depth` pins the true needle."""
+    assert vocab >= 3 + 2 * n_keys + 8
+    assert n_distractors + 1 <= n_keys
+    filler_lo = 3 + 2 * n_keys
+    toks = rng.integers(filler_lo, vocab, size=(batch, seq))
+    mask = np.zeros((batch, seq), np.float32)
+    for b in range(batch):
+        kids = rng.permutation(n_keys)[: n_distractors + 1]
+        lo, hi = 1, seq - 6
+        spots = rng.permutation(np.arange(lo, hi - 3, 4))[: n_distractors + 1]
+        # the TRUE needle goes to the depth-pinned spot (index 0)
+        if depth is not None:
+            spots[0] = int(lo + (hi - lo) * depth)
+        for kid, pos in zip(kids, spots):
+            k_tok, v_tok = 3 + int(kid), 3 + n_keys + int(kid)
+            toks[b, pos:pos + 3] = [NEEDLE, k_tok, v_tok]
+        k0, v0 = 3 + int(kids[0]), 3 + n_keys + int(kids[0])
+        toks[b, -3:] = [QUERY, k0, v0]
+        mask[b, -1] = 1.0          # predict v at the last position
+    return {"tokens": jnp.asarray(toks, jnp.int32),
+            "loss_mask": jnp.asarray(mask)}
+
+
+def needle_batches(key, vocab: int, batch: int, seq: int,
+                   n_keys: int = 32, n_distractors: int = 0) -> Iterator[Dict]:
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    while True:
+        yield needle_batch(rng, vocab, batch, seq, n_keys,
+                           n_distractors=n_distractors)
+
+
+def needle_accuracy(model, params, batch: Dict, method: str,
+                    chunk_pad: int = 128) -> float:
+    """Retrieval accuracy: run chunked prefill over tokens[:-1] with the given
+    selection method and check argmax == the needle value."""
+    tok = batch["tokens"]
+    b, t = tok.shape
+    tp = (t - 1) - ((t - 1) % min(chunk_pad, model.cfg.quoka.chunk_size))
+    prompt = tok[:, (t - 1) - tp: t - 1]
+    target = tok[:, -1]
+    cache = model.init_cache(b, tp + 8)
+    logits, _ = model.prefill(params, {"tokens": prompt}, cache, method)
+    return float(jnp.mean((jnp.argmax(logits, -1) == target)))
+
+
+# ---------------------------------------------------------------------------
+# (c) structured Q/K/V reproducing the paper's Figure-2 geometry
+# ---------------------------------------------------------------------------
+
+def structured_qkv(key, b: int, t: int, h: int, n_kv: int, d: int,
+                   outlier_frac: float = 0.08, n_needles: int = 24,
+                   n_sinks: int = 4, sharp: float = 6.0
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Q/K geometry mirroring the paper's Figure 2:
+
+      * BULK queries cluster tightly around the mean query and concentrate
+        their attention on a small SHARED set of sink keys (first positions)
+        — "near-mean queries concentrate on a small shared group of keys";
+      * a few OUTLIER queries (low CosSim to the mean — high S_q) align
+        sharply with specific NEEDLE keys scattered in the context —
+        "higher S_q correlates with larger max_k(A)" (Fig 2c);
+      * the key cluster has negative cosine with the mean query (Fig 2b).
+
+    Mean/uniform aggregation washes the outliers out; QUOKA's
+    dissimilar-query subselection keeps them.  Returns q (b,t,h,d),
+    k (b,t,n_kv,d), v (b,t,n_kv,d).
+    """
+    ks = jax.random.split(key, 9)
+    dk = jax.random.normal(ks[0], (d,))
+    dk = dk / jnp.linalg.norm(dk)
+    dq = -dk                                   # bulk query direction
+    # keys: anisotropic cluster along +dk (negative cosine with M_Q)
+    k_noise = jax.random.normal(ks[1], (b, t, n_kv, d)) * 0.5
+    k = dk * 1.5 + k_noise
+    # sinks: aligned WITH the bulk queries so near-mean queries hit them
+    sink = (jnp.arange(t) < n_sinks)[None, :, None, None]
+    k = jnp.where(sink, dq * 2.0 + k_noise * 0.2, k)
+    # needles: distinct off-cluster directions at fixed scattered positions
+    needle_pos = jnp.asarray(
+        np.linspace(n_sinks + 3, t - 8, n_needles).astype(np.int32))
+    needle_dirs = jax.random.normal(ks[2], (n_needles, d))
+    needle_dirs = needle_dirs / jnp.linalg.norm(needle_dirs, axis=-1,
+                                                keepdims=True)
+    is_needle = jnp.zeros((t,), bool).at[needle_pos].set(True)
+    ndir_full = jnp.zeros((t, d)).at[needle_pos].set(needle_dirs * 4.0)
+    k = jnp.where(is_needle[None, :, None, None],
+                  ndir_full[None, :, None, :] + k_noise * 0.2, k)
+    v = jax.random.normal(ks[4], (b, t, n_kv, d))
+    # bulk queries: tight cluster along dq
+    q_noise = jax.random.normal(ks[5], (b, t, h, d)) * 0.3
+    q = dq * 1.5 + q_noise
+    # outlier queries: sharply aligned with a random NEEDLE key.  Outlier-ness
+    # and the target are TOKEN-level (shared across heads) — heads inside a
+    # GQA group look at the same retrieved token, which is exactly why the
+    # paper's group-mean pre-aggregation is accurate (Bhojanapalli et al.).
+    is_out = jax.random.bernoulli(ks[6], outlier_frac, (b, t, 1, 1))
+    tgt = jnp.take(needle_pos,
+                   jax.random.randint(ks[7], (b, t), 0, n_needles))
+    kq = jnp.take_along_axis(
+        jnp.broadcast_to(k.mean(axis=2)[:, :, None, :], (b, t, h, d)),
+        jnp.broadcast_to(tgt[..., None, None], (b, t, h, d)), axis=1)
+    # outliers share the bulk queries' NORM (activations are norm-bounded in
+    # real models) — direction carries the retrieval signal, which is why the
+    # paper's cosine scoring beats the scale-sensitive dot product
+    kq_dir = kq / (jnp.linalg.norm(kq, axis=-1, keepdims=True) + 1e-8)
+    bulk_norm = jnp.linalg.norm(q, axis=-1, keepdims=True)
+    q = jnp.where(is_out, kq_dir * bulk_norm * (sharp / 3.0) + q_noise, q)
+    return q, k, v

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels (validated on CPU via interpret=True).
+
+  flash_attention  -- blockwise online-softmax attention with QUOKA's
+                      [selected-prefix | causal-chunk] mask
+  quoka_score      -- fused normalise + QbarK^T + max-over-queries scoring
+
+Use through repro.kernels.ops (layout conversion + backend dispatch).
+"""
+from repro.kernels.ops import flash_attention, quoka_score  # noqa: F401

@@ -1,0 +1,61 @@
+"""Framework-facing kernel wrappers.
+
+Dispatch policy: ``backend="auto"`` uses the Pallas kernels when a TPU is
+present (compiled) and otherwise either the XLA reference (fast on CPU) or
+the interpreted kernel (slow; used by the allclose test-suite via
+``backend="pallas_interpret"``).
+
+Activations use the framework BTHD layout; kernels are BHTD.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_bhtd
+from repro.kernels.quoka_score import quoka_score_bhtd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "xla"
+    return backend
+
+
+def flash_attention(q, k, v, k_valid=None, *, causal: bool = True,
+                    boundary: int = 0, scale: Optional[float] = None,
+                    backend: str = "auto"):
+    """q: (b, tq, h, d); k, v: (b, tk, h_kv, d); k_valid: (b, tk) bool.
+    Returns (b, tq, h, d)."""
+    be = _resolve(backend)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if be == "xla":
+        out = ref.flash_attention_ref(qt, kt, vt, causal=causal,
+                                      boundary=boundary, k_valid=k_valid,
+                                      scale=scale)
+    else:
+        out = flash_attention_bhtd(qt, kt, vt, k_valid, causal=causal,
+                                   boundary=boundary, scale=scale,
+                                   interpret=(be != "pallas"))
+    return out.transpose(0, 2, 1, 3)
+
+
+def quoka_score(qbar, k, valid, *, backend: str = "auto"):
+    """qbar: (b, n_q, n_kv, d) normalised pre-aggregated queries (BTHD-ish);
+    k: (b, t, n_kv, d) raw keys; valid: (b, t).
+    Returns fp32 scores (b, n_kv, t)."""
+    be = _resolve(backend)
+    qt = qbar.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    if be == "xla":
+        return ref.quoka_score_ref(qt, kt, valid)
+    return quoka_score_bhtd(qt, kt, valid, interpret=(be != "pallas"))

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Layouts here are kernel-native (BHTD) — the ops.py wrappers convert from the
+framework's BTHD activations.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        boundary: int = 0,
+                        k_valid: Optional[jax.Array] = None,
+                        scale: Optional[float] = None):
+    """Oracle for the flash kernel.
+
+    q: (b, h, tq, d); k, v: (b, h_kv, tk, d) with h % h_kv == 0.
+    Mask semantics (matching QUOKA's [selected | chunk] layout):
+      attend(i, j) iff (k_valid[b, j]) and (j < boundary  OR  not causal
+                                            OR  j - boundary <= i)
+    i.e. the first `boundary` keys are an unconditioned prefix (the selected
+    budget), the remainder is causal w.r.t. the chunk-local index.
+    """
+    b, h, tq, d = q.shape
+    h_kv, tk = k.shape[1], k.shape[2]
+    g = h // h_kv
+    scale = (d ** -0.5) if scale is None else scale
+    kr = jnp.repeat(k, g, axis=1)
+    vr = jnp.repeat(v, g, axis=1)
+    logits = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) * scale
+    i = jnp.arange(tq)[:, None]
+    j = jnp.arange(tk)[None, :]
+    m = jnp.ones((tq, tk), bool)
+    if causal:
+        m = (j < boundary) | ((j - boundary) <= i)
+    mask = m[None, None]
+    if k_valid is not None:
+        mask = mask & k_valid[:, None, None, :]
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    # rows with every key masked produce uniform garbage; zero them like the
+    # kernel does (all-masked rows have l == 0)
+    any_valid = mask.any(-1, keepdims=True)
+    p = jnp.where(any_valid, p, 0.0)
+    return jnp.einsum("bhts,bhsd->bhtd", p, vr.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def quoka_score_ref(qbar, k, valid):
+    """Oracle for the fused scoring kernel (Algorithm 1 lines 7-10).
+
+    qbar: (b, n_kv, n_q, d) — pre-aggregated, ALREADY normalised queries;
+    k:    (b, n_kv, t, d)  — raw keys (normalised inside);
+    valid: (b, t) bool.
+    Returns fp32 scores (b, n_kv, t): max over n_q of CosSim, NEG_INF invalid.
+    """
+    kf = k.astype(jnp.float32)
+    kn = kf / (jnp.linalg.norm(kf, axis=-1, keepdims=True) + 1e-8)
+    s = jnp.einsum("bknd,bktd->bknt", qbar.astype(jnp.float32), kn)
+    s = s.max(axis=2)
+    return jnp.where(valid[:, None, :], s, NEG_INF)

@@ -1,0 +1,306 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count at first init).  Do not move them; do not set this flag
+# globally — smoke tests and benchmarks must see one real device.
+
+import argparse                                                    # noqa: E402
+import dataclasses                                                 # noqa: E402
+import json                                                        # noqa: E402
+import time                                                        # noqa: E402
+from typing import Dict, Optional                                  # noqa: E402
+
+import jax                                                         # noqa: E402
+import jax.numpy as jnp                                            # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P        # noqa: E402
+
+from repro.analysis import hlo_cost                                # noqa: E402
+from repro.analysis import roofline as rl                          # noqa: E402
+from repro.configs import ASSIGNED, get_config                     # noqa: E402
+from repro.launch.mesh import make_production_mesh                 # noqa: E402
+from repro.models.model import build_model                         # noqa: E402
+from repro.sharding import specs as sh                             # noqa: E402
+from repro.training import loop as train_loop                      # noqa: E402
+from repro.training import optimizer as opt                        # noqa: E402
+
+SHAPES = {
+    "train_4k":    ("train",   4_096,   256),
+    "prefill_32k": ("prefill", 32_768,  32),
+    "decode_32k":  ("decode",  32_768,  128),
+    "long_500k":   ("decode",  524_288, 1),
+}
+
+# long_500k needs sub-quadratic/state-bounded decode memory: SSM, hybrid and
+# the sliding-window dense archs qualify (see DESIGN.md §Arch-applicability)
+LONG_OK = {"gemma3-27b", "h2o-danube-3-4b", "rwkv6-1.6b", "zamba2-7b"}
+# whisper is an enc-dec with a 30s window: decode shapes at 32k are lowered
+# mechanically (self-attn cache 32k) but 500k is skipped.
+
+RESULT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "experiments", "dryrun")
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg, shape_name: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    kind, seq, batch = SHAPES[shape_name]
+    dt = cfg.compute_dtype
+    out = {}
+    text = seq
+    if cfg.family == "vlm":
+        text = seq - cfg.frontend.n_tokens
+        out["patches"] = _sds((batch, cfg.frontend.n_tokens,
+                               cfg.frontend.d_in), dt)
+    if cfg.family == "audio":
+        out["frames"] = _sds((batch, cfg.encoder.n_ctx, cfg.d_model), dt)
+    out["tokens"] = _sds((batch, text), jnp.int32)
+    return out
+
+
+def _cast_float(tree, dtype):
+    def c(s):
+        if jnp.issubdtype(s.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(s.shape, dtype)
+        return s
+    return jax.tree.map(c, tree)
+
+
+def _mesh_name(multi_pod: bool) -> str:
+    return "2x16x16" if multi_pod else "16x16"
+
+
+def build_case(arch: str, shape_name: str, *, method: Optional[str] = None,
+               cfg_override=None, chunkwise: bool = False):
+    """Returns (fn, args_shape_structs, in_shardings_builder(mesh), meta)."""
+    cfg = cfg_override or get_config(arch)
+    if method:
+        cfg = dataclasses.replace(
+            cfg, quoka=dataclasses.replace(cfg.quoka, method=method))
+    kind, seq, batch = SHAPES[shape_name]
+    if kind == "train" and cfg_override is None:
+        # activation checkpointing is the production baseline at this scale
+        # (a 671B × 1M-token step does not fit HBM otherwise)
+        cfg = dataclasses.replace(cfg, remat=True)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    batch_s = input_specs(cfg, shape_name)
+
+    if kind == "train":
+        state_s = jax.eval_shape(
+            lambda k: train_loop.init_state(model, k), key)
+        state_s = _cast_float(state_s, cfg.compute_dtype)
+        step = train_loop.make_train_step(model, opt.OptimizerConfig())
+        args = (state_s, batch_s)
+
+        def shardings(mesh):
+            pspec = sh.param_specs(cfg, state_s.params, mesh)
+            st = train_loop.TrainState(
+                params=pspec,
+                opt=opt.OptState(step=P(), mu=pspec, nu=pspec))
+            return (sh.to_shardings(mesh, st),
+                    sh.to_shardings(mesh, sh.batch_spec(cfg, batch_s, mesh)))
+        return step, args, shardings, dict(cfg=cfg, model=model, kind=kind,
+                                           seq=seq, batch=batch)
+
+    # decode caches need seq+1 slots; pad capacity to a multiple of 16 so the
+    # sequence axis stays shardable over `data` (a 524289-slot cache would
+    # silently REPLICATE — found in §Perf iteration C2)
+    cap = seq if kind == "prefill" else seq + 16
+    cache_s = jax.eval_shape(lambda: model.init_cache(batch, cap))
+    params_s = _cast_float(jax.eval_shape(model.init, key),
+                           cfg.compute_dtype)
+
+    if kind == "prefill":
+        if chunkwise:
+            # §Perf: steady-state per-chunk dispatch (production serving) —
+            # one B_CP chunk with a donated cache; roofline terms are
+            # multiplied by n_chunks by the caller for comparability
+            bcp = cfg.quoka.chunk_size
+            chunk_s = dict(batch_s)
+            chunk_s["tokens"] = _sds((batch, bcp), jnp.int32)
+            chunk_s.pop("patches", None)
+            chunk_s.pop("frames", None)
+
+            def step(p, b, pos0, c):
+                return model.prefill_chunk(p, b, pos0, c)
+            args = (params_s, chunk_s, _sds((), jnp.int32), cache_s)
+
+            def shardings(mesh):
+                return (sh.to_shardings(mesh, sh.param_specs(cfg, params_s,
+                                                             mesh)),
+                        sh.to_shardings(mesh, sh.batch_spec(cfg, chunk_s,
+                                                            mesh)),
+                        NamedSharding(mesh, P()),
+                        sh.to_shardings(mesh, sh.cache_specs(cfg, cache_s,
+                                                             mesh)))
+            return step, args, shardings, dict(cfg=cfg, model=model,
+                                               kind=kind, seq=seq,
+                                               batch=batch, chunkwise=True)
+
+        def step(p, b, c):
+            return model.prefill(p, b, c)
+        args = (params_s, batch_s, cache_s)
+
+        def shardings(mesh):
+            return (sh.to_shardings(mesh, sh.param_specs(cfg, params_s, mesh)),
+                    sh.to_shardings(mesh, sh.batch_spec(cfg, batch_s, mesh)),
+                    sh.to_shardings(mesh, sh.cache_specs(cfg, cache_s, mesh)))
+    else:
+        tok_s = _sds((batch,), jnp.int32)
+        pos_s = _sds((), jnp.int32)
+
+        def step(p, tok, pos, c):
+            return model.decode_step(p, tok, pos, c)
+        args = (params_s, tok_s, pos_s, cache_s)
+
+        def shardings(mesh):
+            bspec = P(sh.fsdp_axes(mesh)) if batch % 32 == 0 else P(None)
+            return (sh.to_shardings(mesh, sh.param_specs(cfg, params_s, mesh)),
+                    NamedSharding(mesh, bspec),
+                    NamedSharding(mesh, P()),
+                    sh.to_shardings(mesh, sh.cache_specs(cfg, cache_s, mesh)))
+    return step, args, shardings, dict(cfg=cfg, model=model, kind=kind,
+                                       seq=seq, batch=batch)
+
+
+def dry_run(arch: str, shape_name: str, *, multi_pod: bool = False,
+            method: Optional[str] = None, save: bool = True,
+            verbose: bool = True, donate: bool = False,
+            tag_suffix: str = "", chunkwise: bool = False) -> Dict:
+    kind, seq, batch = SHAPES[shape_name]
+    step, args, shardings, meta = build_case(arch, shape_name, method=method,
+                                             chunkwise=chunkwise)
+    cfg = meta["cfg"]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    # §Perf: donate the state/cache buffer so XLA updates it in place instead
+    # of copying it every step (decode caches are tens of GB per chip)
+    donate_argnums = ()
+    if donate or chunkwise:
+        donate_argnums = (0,) if kind == "train" else \
+            ((3,) if (kind == "decode" or chunkwise) else (2,))
+
+    from repro.sharding import ctx as shctx
+    shctx.set_policy(mesh, tuple(a for a in ("pod", "data")
+                                 if a in mesh.axis_names))
+    t0 = time.time()
+    try:
+        with mesh:
+            in_sh = shardings(mesh)
+            jitted = jax.jit(step, in_shardings=in_sh,
+                             donate_argnums=donate_argnums)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            t1 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t1
+    finally:
+        shctx.clear_policy()
+
+    mem = compiled.memory_analysis()
+    t2 = time.time()
+    cost = hlo_cost.analyze_text(compiled.as_text())   # per-device, trip-aware
+    t_analyse = time.time() - t2
+    if chunkwise:                      # whole-prompt equivalent of the
+        n_chunks = seq // cfg.quoka.chunk_size          # per-chunk step
+        cost = {k: v * n_chunks for k, v in cost.items()}
+    xla_cost = compiled.cost_analysis()
+    if isinstance(xla_cost, list):
+        xla_cost = xla_cost[0]
+    mf = rl.model_flops(cfg, kind, batch, seq,
+                        budget=None if (method or cfg.quoka.method) != "full"
+                        else seq)
+    bytes_per_chip = float(
+        getattr(mem, "temp_size_in_bytes", 0)
+        + getattr(mem, "argument_size_in_bytes", 0)
+        + getattr(mem, "output_size_in_bytes", 0)
+        - getattr(mem, "alias_size_in_bytes", 0))
+    roof = rl.analyse(arch, shape_name, _mesh_name(multi_pod), chips,
+                      cost, cost, mf, bytes_per_chip,
+                      note=f"method={method or cfg.quoka.method}")
+    res = roof.as_dict()
+    res.update(t_lower_s=round(t_lower, 1), t_compile_s=round(t_compile, 1),
+               t_analyse_s=round(t_analyse, 1),
+               collectives={k: v for k, v in cost.items()
+                            if k.startswith("coll_")},
+               xla_flops_body_once=float(xla_cost.get("flops", 0.0)),
+               mem_temp=float(getattr(mem, "temp_size_in_bytes", 0)),
+               mem_args=float(getattr(mem, "argument_size_in_bytes", 0)),
+               mem_out=float(getattr(mem, "output_size_in_bytes", 0)),
+               mem_alias=float(getattr(mem, "alias_size_in_bytes", 0)))
+    if verbose:
+        print(f"[{arch} × {shape_name} × {_mesh_name(multi_pod)}] "
+              f"compile {t_compile:.0f}s  flops/chip {res['hlo_flops']:.3g}  "
+              f"bytes/chip {res['hlo_bytes']:.3g}  "
+              f"coll/chip {res['coll_bytes']:.3g}  mem/chip {bytes_per_chip:.3g}  "
+              f"useful={res['useful_ratio']:.2f}  "
+              f"bottleneck={res['bottleneck']}"
+              f"  t=({res['t_compute']*1e3:.2f},{res['t_memory']*1e3:.2f},"
+              f"{res['t_collective']*1e3:.2f})ms")
+    if save:
+        os.makedirs(RESULT_DIR, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{_mesh_name(multi_pod)}"
+        if method:
+            tag += f"_{method}"
+        if tag_suffix:
+            tag += f"_{tag_suffix}"
+        with open(os.path.join(RESULT_DIR, tag + ".json"), "w") as f:
+            json.dump(res, f, indent=2, default=float)
+    return res
+
+
+def cases(include_long=True):
+    for arch in ASSIGNED:
+        for shape in SHAPES:
+            if shape == "long_500k" and arch not in LONG_OK:
+                continue
+            if shape == "long_500k" and not include_long:
+                continue
+            yield arch, shape
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--method", default=None,
+                    help="selection method override (e.g. full, quoka)")
+    ap.add_argument("--donate", action="store_true",
+                    help="donate state/cache buffers (§Perf)")
+    ap.add_argument("--chunkwise", action="store_true",
+                    help="lower the steady-state per-chunk prefill step "
+                         "instead of the monolithic scan (§Perf)")
+    ap.add_argument("--tag", default="", help="result filename suffix")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    todo = []
+    if args.all:
+        todo = list(cases())
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+    meshes = [False, True] if (args.both_meshes or args.multi_pod and args.all) \
+        else [args.multi_pod]
+    failures = []
+    for arch, shape in todo:
+        for mp in meshes:
+            try:
+                dry_run(arch, shape, multi_pod=mp, method=args.method,
+                        donate=args.donate, tag_suffix=args.tag,
+                        chunkwise=args.chunkwise)
+            except Exception as e:  # noqa: BLE001
+                failures.append((arch, shape, mp, repr(e)))
+                print(f"FAIL [{arch} × {shape} × {_mesh_name(mp)}]: {e}")
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+    print("dry-run: all combinations lowered and compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Production mesh builders (functions, not module constants — importing
+this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (v5e pod).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the `pod` axis is the
+    slow DCI axis and carries only data-parallel gradient reduction."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1, data: int = 1):
+    """Small mesh for CPU sharding tests (run under
+    XLA_FLAGS=--xla_force_host_platform_device_count=N)."""
+    return jax.make_mesh((data, model), ("data", "model"))

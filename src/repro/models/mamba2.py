@@ -1,0 +1,156 @@
+"""Mamba2 (SSD) block for the zamba2 hybrid (arXiv:2411.15242 backbone).
+
+Same chunked-scan TPU adaptation as rwkv6.py, but the decay is a *scalar
+per head per step* (state-space dual form), so the intra-chunk pairwise
+tensor is only (b, H, C, C) — cheap; we use a wider sub-chunk.
+
+Sharding note: the reference implementation fuses [z | xBC | dt] into one
+in_proj; here the projections are SEPARATE params so each output axis can be
+tensor-sharded cleanly (z/x/dt head-aligned over `model`, the small B/C
+channels replicated) — see sharding/specs.py.  The depthwise conv is split
+the same way (mathematically identical for depthwise).
+
+State per layer: conv tail (b, d_conv-1, channels) + SSD state
+(b, H, P, N) fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import linear, linear_init, rmsnorm, rmsnorm_init
+from repro.serving.cache import MambaCache
+
+CHUNK = 64
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    conv_ch = di + 2 * s.d_state       # x, B, C all pass the conv
+    return di, nh, conv_ch
+
+
+def mamba_init(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di, nh, _ = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "z_proj": linear_init(ks[0], d, di),
+        "x_proj": linear_init(ks[1], d, di),
+        "bc_proj": linear_init(ks[2], d, 2 * s.d_state),
+        "dt_proj": linear_init(ks[3], d, nh),
+        "conv_x_w": jax.random.normal(ks[4], (s.d_conv, di)) / math.sqrt(s.d_conv),
+        "conv_x_b": jnp.zeros((di,)),
+        "conv_bc_w": jax.random.normal(ks[5], (s.d_conv, 2 * s.d_state))
+                     / math.sqrt(s.d_conv),
+        "conv_bc_b": jnp.zeros((2 * s.d_state,)),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)),
+        "d_skip": jnp.ones((nh,)),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(jax.random.fold_in(key, 7), (nh,),
+                                       minval=math.log(1e-3),
+                                       maxval=math.log(1e-1))))),
+        "norm": rmsnorm_init(di),
+        "out_proj": linear_init(jax.random.fold_in(key, 8), di, d),
+    }
+
+
+def mamba_cache_init(batch: int, cfg: ModelConfig, dtype) -> MambaCache:
+    s = cfg.ssm
+    di, nh, conv_ch = _dims(cfg)
+    return MambaCache(
+        conv=jnp.zeros((batch, s.d_conv - 1, conv_ch), dtype),
+        ssd=jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    )
+
+
+def _causal_conv(xc, conv_tail, w, b):
+    """Depthwise causal conv over time.  xc: (b, T, ch); conv_tail: (b, K-1, ch).
+    Returns (y (b, T, ch), new_tail)."""
+    kw = w.shape[0]
+    full = jnp.concatenate([conv_tail.astype(xc.dtype), xc], axis=1)
+    y = sum(full[:, i:i + xc.shape[1], :] * w[i].astype(xc.dtype)
+            for i in range(kw))
+    y = y + b.astype(xc.dtype)
+    new_tail = full[:, -(kw - 1):, :] if kw > 1 else conv_tail
+    return y, new_tail
+
+
+def _ssd_chunked(x, dt, la, B, C, state):
+    """Chunked SSD scan.
+
+    x: (b, T, H, P) fp32; dt: (b, T, H); la: (b, T, H) log-decay <= 0;
+    B, C: (b, T, N); state: (b, H, P, N) fp32.
+    Returns (y (b, T, H, P), new_state).
+    """
+    b, t, h, p = x.shape
+    c = min(CHUNK, t)
+    nc = t // c
+    r = lambda a: a.reshape(b, nc, c, *a.shape[2:]).swapaxes(0, 1)
+    xs, dts, las, Bs, Cs = r(x), r(dt), r(la), r(B), r(C)
+    tri = jnp.tril(jnp.ones((c, c), bool))                   # s <= t
+
+    def body(S, inp):
+        xc, dtc, lac, Bc, Cc = inp                            # (b,c,...)
+        cum = jnp.cumsum(lac, axis=1)                         # (b,c,H) inclusive
+        # intra: P[t,s] = (C_t . B_s) exp(cum_t - cum_s) dt_s , s <= t
+        expo = cum[:, :, None, :] - cum[:, None, :, :]        # (b,t,s,H)
+        expo = jnp.where(tri[None, :, :, None], expo, -jnp.inf)
+        cb = jnp.einsum("btn,bsn->bts", Cc, Bc)               # (b,t,s)
+        pm = cb[..., None] * jnp.exp(expo) * dtc[:, None, :, :]
+        y_intra = jnp.einsum("btsh,bshp->bthp", pm, xc)
+        # inter: y_t += (exp(cum_t) S) . C_t
+        y_inter = jnp.einsum("bth,bhpn,btn->bthp", jnp.exp(cum), S, Cc)
+        # state to end of chunk
+        wS = jnp.exp(cum[:, -1, :])                           # (b,H)
+        coef = jnp.exp(cum[:, -1:, :] - cum) * dtc            # (b,c,H)
+        S_new = wS[:, :, None, None] * S + jnp.einsum(
+            "bch,bchp,bcn->bhpn", coef, xc, Bc)
+        return S_new, y_intra + y_inter
+
+    state, ys = jax.lax.scan(body, state, (xs, dts, las, Bs, Cs))
+    return ys.swapaxes(0, 1).reshape(b, t, h, p), state
+
+
+def mamba_apply(p, x, cache: MambaCache, cfg: ModelConfig
+                ) -> Tuple[jax.Array, MambaCache]:
+    """One Mamba2 mixer over segment x (b, T, d) (already normed)."""
+    s = cfg.ssm
+    b, t, d = x.shape
+    di, nh, conv_ch = _dims(cfg)
+    z = linear(p["z_proj"], x)
+    xr = linear(p["x_proj"], x)
+    bc = linear(p["bc_proj"], x)
+    dt_raw = linear(p["dt_proj"], x)
+    xr, tail_x = _causal_conv(xr, cache.conv[..., :di],
+                              p["conv_x_w"], p["conv_x_b"])
+    bc, tail_bc = _causal_conv(bc, cache.conv[..., di:],
+                               p["conv_bc_w"], p["conv_bc_b"])
+    xr = jax.nn.silu(xr)
+    bc = jax.nn.silu(bc)
+    x_ssm = xr.astype(jnp.float32).reshape(b, t, nh, s.head_dim)
+    Bm = bc[..., :s.d_state].astype(jnp.float32)
+    Cm = bc[..., s.d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (b,t,H)
+    la = -dt * jnp.exp(p["a_log"])                                   # <= 0
+
+    # pad to sub-chunk multiple
+    c = min(CHUNK, max(t, 1))
+    pad = (-t) % c
+    if pad:
+        pf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        x_ssm, Bm, Cm, dt = pf(x_ssm), pf(Bm), pf(Cm), pf(dt)
+        la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)))   # la=0 ⇒ state kept
+    y, state = _ssd_chunked(x_ssm, dt, la, Bm, Cm, cache.ssd)
+    y = y[:, :t] + p["d_skip"][None, None, :, None] * x_ssm[:, :t]
+    y = y.reshape(b, t, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    new_conv = jnp.concatenate([tail_x, tail_bc], axis=-1)
+    return linear(p["out_proj"], y), MambaCache(conv=new_conv, ssd=state)

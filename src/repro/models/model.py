@@ -1,0 +1,289 @@
+"""Unified model: embeddings + scanned block stacks + read-out, with
+three entry points used across the framework:
+
+  * ``train_logits`` / ``loss``     — full-sequence training forward
+  * ``prefill``                     — CHUNKED prefill (paper Algorithm 2):
+                                      a lax.scan over chunks; each chunk
+                                      sub-selects the KV cache per layer
+  * ``decode_step``                 — one-token decode with selection
+
+Modality frontends (VLM patches / whisper frames) are stubs per the
+assignment: the batch provides pre-computed embeddings; the in-model
+projector / encoder transformer consumes them.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.blocks import DecCrossBlock, MLABlock, make_block
+from repro.models.layers import (embed, embed_init, linear, linear_init,
+                                 mlp_init, rmsnorm, rmsnorm_init, sinusoidal,
+                                 unembed)
+from repro.models.stack import Stack
+
+
+class ModelCache(NamedTuple):
+    stacks: Tuple            # tuple over stacks of tuple-over-positions
+    enc_done: jax.Array      # () bool — whisper encoder ran (unused otherwise)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.stacks = [Stack(cfg, period, reps)
+                       for period, reps in cfg.stacks()]
+        self.has_shared = any(k == "mamba_shared_attn"
+                              for pd, _ in cfg.stacks() for k in pd)
+        self.is_audio = cfg.family == "audio"
+        self.is_vlm = cfg.family == "vlm"
+        if self.is_audio:
+            self.enc_stack = Stack(cfg, ("enc_attn",), cfg.encoder.n_layers)
+
+    # ------------------------------------------------------------------
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        p = {
+            "embed": embed_init(ks[0], cfg.vocab, cfg.d_model),
+            "stacks": tuple(s.init(jax.random.fold_in(ks[1], i))
+                            for i, s in enumerate(self.stacks)),
+            "ln_f": rmsnorm_init(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = linear_init(ks[2], cfg.d_model, cfg.vocab)
+        if self.has_shared:
+            shared_blk = make_block(cfg, "attn")
+            p["shared"] = shared_blk.init(ks[3])
+        if self.is_audio:
+            p["enc"] = {"stack": self.enc_stack.init(ks[4]),
+                        "ln": rmsnorm_init(cfg.d_model)}
+        if self.is_vlm:
+            f = cfg.frontend
+            p["proj"] = {"fc1": linear_init(ks[5], f.d_in, cfg.d_model,
+                                            bias=True),
+                         "fc2": linear_init(ks[6], cfg.d_model, cfg.d_model,
+                                            bias=True)}
+        if cfg.mtp:
+            mtp_blk = MLABlock(cfg, "mla") if cfg.mla else make_block(cfg, "attn")
+            p["mtp"] = {"block": mtp_blk.init(ks[7]),
+                        "ln": rmsnorm_init(cfg.d_model),
+                        "mix": linear_init(jax.random.fold_in(ks[7], 1),
+                                           2 * cfg.d_model, cfg.d_model)}
+        return p
+
+    # ------------------------------------------------------------------
+    # input embedding (modality frontends are stubs — see module docstring)
+    # ------------------------------------------------------------------
+    def embed_inputs(self, p, batch: Dict) -> Tuple[jax.Array, jax.Array]:
+        """Returns (x (b, T, d), pos (b, T))."""
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        tok = batch["tokens"]
+        x = embed(p["embed"], tok, dt)
+        if self.is_vlm:
+            pe = batch["patches"].astype(dt)              # (b, n_patch, d_in)
+            h = jax.nn.gelu(linear(p["proj"]["fc1"], pe))
+            h = linear(p["proj"]["fc2"], h)
+            x = jnp.concatenate([h, x], axis=1)
+        b, t = x.shape[:2]
+        pos = jnp.arange(t, dtype=jnp.int32)[None].repeat(b, 0)
+        if not cfg.use_rope:
+            x = x + sinusoidal(pos, cfg.d_model, dt)
+        from repro.sharding import ctx as shctx
+        return shctx.shard_activation(x), pos
+
+    def encode(self, p, frames) -> jax.Array:
+        """Whisper encoder over stub frame embeddings (b, n_ctx, d)."""
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        b, s, _ = frames.shape
+        pos = jnp.arange(s, dtype=jnp.int32)[None].repeat(b, 0)
+        x = frames.astype(dt) + sinusoidal(pos, cfg.d_model, dt)
+        x, _ = self.enc_stack.train(p["enc"]["stack"], x, pos, {})
+        return rmsnorm(p["enc"]["ln"], x, cfg.norm_eps)
+
+    def _ctx(self, p, method: str, enc_out=None) -> Dict:
+        ctx = {"method": method, "qcfg": self.cfg.quoka}
+        if self.has_shared:
+            ctx["shared"] = p["shared"]
+        if enc_out is not None:
+            ctx["enc_out"] = enc_out
+        return ctx
+
+    def _readout(self, p, x) -> jax.Array:
+        x = rmsnorm(p["ln_f"], x, self.cfg.norm_eps)
+        if self.cfg.tie_embeddings:
+            return unembed(p["embed"], x)
+        return linear(p["lm_head"], x.astype(jnp.float32))
+
+    # ------------------------------------------------------------------
+    # training forward
+    # ------------------------------------------------------------------
+    def train_logits(self, p, batch: Dict) -> Tuple[jax.Array, jax.Array]:
+        """Full-sequence logits.  Returns (logits (b,T,V), aux_loss)."""
+        enc_out = self.encode(p, batch["frames"]) if self.is_audio else None
+        x, pos = self.embed_inputs(p, batch)
+        ctx = self._ctx(p, "full", enc_out)
+        aux = jnp.zeros((), jnp.float32)
+        for s, sp in zip(self.stacks, p["stacks"]):
+            x, a = s.train(sp, x, pos, ctx)
+            aux = aux + a
+        hidden = x
+        logits = self._readout(p, x)
+        if self.cfg.mtp:
+            aux = aux + self._mtp_loss(p, hidden, pos, batch, ctx)
+        return logits, aux
+
+    def _mtp_loss(self, p, hidden, pos, batch, ctx) -> jax.Array:
+        """DeepSeek-V3 multi-token prediction: one extra block predicts
+        token t+2 from [norm(h_t); emb(tok_{t+1})] (weight 0.3)."""
+        cfg = self.cfg
+        tok = batch["tokens"]
+        nxt = jnp.roll(tok, -1, axis=1)
+        emb_n = embed(p["embed"], nxt, hidden.dtype)
+        h = rmsnorm(p["mtp"]["ln"], hidden, cfg.norm_eps)
+        h = linear(p["mtp"]["mix"], jnp.concatenate([h, emb_n], axis=-1))
+        blk = MLABlock(cfg, "mla") if cfg.mla else make_block(cfg, "attn")
+        h, _ = blk.train(p["mtp"]["block"], h, pos, ctx)
+        logits = self._readout(p, h)                    # predicts t+2
+        tgt = jnp.roll(tok, -2, axis=1)
+        mask = jnp.arange(tok.shape[1]) < tok.shape[1] - 2
+        ll = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(ll, tgt[..., None], axis=-1)[..., 0]
+        return 0.3 * jnp.mean(nll * mask[None, :])
+
+    def loss(self, p, batch: Dict) -> jax.Array:
+        """Next-token cross entropy (+ MoE/MTP aux).  For VLM the frontend
+        positions are excluded; for whisper the loss is over decoder tokens."""
+        logits, aux = self.train_logits(p, batch)
+        tok = batch["tokens"]
+        if self.is_vlm:                                  # drop patch positions
+            logits = logits[:, -tok.shape[1]:]
+        tgt = tok[:, 1:]
+        lg = logits[:, :-1]
+        ll = jax.nn.log_softmax(lg, axis=-1)
+        nll = -jnp.take_along_axis(ll, tgt[..., None], axis=-1)[..., 0]
+        mask = batch.get("loss_mask")
+        if mask is not None:
+            m = mask[:, 1:].astype(jnp.float32)
+            return (nll * m).sum() / jnp.maximum(m.sum(), 1.0) + aux
+        return nll.mean() + aux
+
+    # ------------------------------------------------------------------
+    # serving: chunked prefill (Algorithm 2) + decode
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, cap: int) -> ModelCache:
+        dt = self.cfg.compute_dtype
+        return ModelCache(
+            stacks=tuple(s.init_cache(batch, cap, dt) for s in self.stacks),
+            enc_done=jnp.zeros((), bool),
+        )
+
+    def _apply_stacks(self, p, x, pos, cache: ModelCache, ctx):
+        new = []
+        aux = jnp.zeros((), jnp.float32)
+        for s, sp, sc in zip(self.stacks, p["stacks"], cache.stacks):
+            x, nc, a = s.apply(sp, x, pos, sc, ctx)
+            new.append(nc)
+            aux = aux + a
+        return x, cache._replace(stacks=tuple(new)), aux
+
+    def _build_cross(self, p, cache: ModelCache, enc_out) -> ModelCache:
+        """Fill whisper cross-attention KV (vmapped over stacked layers)."""
+        blk: DecCrossBlock = self.stacks[0].blocks[0]
+        new_stacks = []
+        for s, sp, sc in zip(self.stacks, p["stacks"], cache.stacks):
+            pos_caches = []
+            for j, b in enumerate(s.blocks):
+                c = sc[j]
+                if b.kind == "dec_cross":
+                    cross = jax.vmap(b.build_cross, in_axes=(0, None))(
+                        sp[j], enc_out)
+                    c = c._replace(cross=jax.tree.map(
+                        lambda l: l.astype(self.cfg.compute_dtype), cross))
+                pos_caches.append(c)
+            new_stacks.append(tuple(pos_caches))
+        return cache._replace(stacks=tuple(new_stacks),
+                              enc_done=jnp.ones((), bool))
+
+    def prefill(self, p, batch: Dict, cache: ModelCache,
+                method: Optional[str] = None
+                ) -> Tuple[jax.Array, ModelCache]:
+        """Chunked prefill of the full prompt.  Returns (last-position
+        logits (b, V), filled cache)."""
+        cfg = self.cfg
+        method = method or cfg.quoka.method
+        if self.is_audio:
+            enc_out = self.encode(p, batch["frames"])
+            cache = self._build_cross(p, cache, enc_out)
+        x_all, pos_all = self.embed_inputs(p, batch)
+        b, t, d = x_all.shape
+        bcp = min(cfg.quoka.chunk_size, t)
+        assert t % bcp == 0, f"prompt length {t} must be a multiple of {bcp}"
+        nc = t // bcp
+        xs = x_all.reshape(b, nc, bcp, d).swapaxes(0, 1)
+        ps = pos_all.reshape(b, nc, bcp).swapaxes(0, 1)
+        ctx = self._ctx(p, method)
+
+        def body(carry, inp):
+            cch, _ = carry
+            xc, pc = inp
+            h, cch, _aux = self._apply_stacks(p, xc, pc, cch, ctx)
+            return (cch, h[:, -1, :]), None
+
+        (cache, last_h), _ = jax.lax.scan(
+            body, (cache, jnp.zeros((b, d), cfg.compute_dtype)), (xs, ps))
+        return self._readout(p, last_h[:, None, :])[:, 0], cache
+
+    def prefill_chunk(self, p, batch: Dict, pos_start, cache: ModelCache,
+                      method: Optional[str] = None
+                      ) -> Tuple[jax.Array, ModelCache]:
+        """One B_CP chunk through all stacks — the steady-state unit of
+        chunked prefill for per-chunk dispatch (continuous batching / the
+        production serving path; §Perf: carrying caches through a scan over
+        chunks shuttles every layer's full cache per chunk, while per-chunk
+        dispatch with a DONATED cache updates 128 rows in place).
+
+        batch["tokens"]: (b, B_CP) chunk; pos_start: traced scalar.
+        Returns (last hidden (b, d), cache)."""
+        cfg = self.cfg
+        method = method or cfg.quoka.method
+        tok = batch["tokens"]
+        b, t = tok.shape
+        dt = cfg.compute_dtype
+        x = embed(p["embed"], tok, dt)
+        pos = (jnp.asarray(pos_start, jnp.int32)
+               + jnp.arange(t, dtype=jnp.int32))[None].repeat(b, 0)
+        if not cfg.use_rope:
+            x = x + sinusoidal(pos, cfg.d_model, dt)
+        from repro.sharding import ctx as shctx
+        x = shctx.shard_activation(x)
+        ctx = self._ctx(p, method)
+        x, cache, _ = self._apply_stacks(p, x, pos, cache, ctx)
+        return x[:, -1, :], cache
+
+    def decode_step(self, p, tokens, pos, cache: ModelCache,
+                    method: Optional[str] = None
+                    ) -> Tuple[jax.Array, ModelCache]:
+        """One decode step.  tokens: (b,) int32; pos: scalar or (b,).
+        Returns (logits (b, V), cache)."""
+        cfg = self.cfg
+        method = method or cfg.quoka.method
+        dt = cfg.compute_dtype
+        b = tokens.shape[0]
+        x = embed(p["embed"], tokens[:, None], dt)
+        pos2 = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1, 1),
+                                (b, 1))
+        if not cfg.use_rope:
+            x = x + sinusoidal(pos2, cfg.d_model, dt)
+        ctx = self._ctx(p, method)
+        x, cache, _ = self._apply_stacks(p, x, pos2, cache, ctx)
+        return self._readout(p, x)[:, 0], cache
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,166 @@
+"""RWKV6 "Finch" block — attention-free time-mix with DATA-DEPENDENT decay
+(arXiv:2404.05892), plus the squared-ReLU channel-mix.
+
+TPU adaptation (see DESIGN.md): instead of a per-token recurrence (a 4096-
+iteration while-loop that starves the MXU), the segment is processed in
+sub-chunks of ``CHUNK`` tokens with the intra-chunk interactions expressed as
+a masked (t, s, d) einsum and the inter-chunk state carried by a short
+``lax.scan`` — the GLA/chunked-scan formulation.  All exponents are pairwise
+*differences* of cumulative log-decays (always <= 0), so the fp32 math never
+overflows even for long segments.
+
+State per layer: wkv (b, H, D, D) fp32, plus the token-shift carries.
+QUOKA does not apply here (no KV cache) — noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import groupnorm, linear, linear_init
+from repro.serving.cache import RWKVCache
+
+CHUNK = 16  # intra-chunk einsum width (C*C*D working set per head)
+
+
+def rwkv_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    hd = cfg.rwkv.head_dim
+    nh = d // hd
+    lora = cfg.rwkv.decay_lora
+    ks = jax.random.split(key, 12)
+    std = 1.0 / math.sqrt(d)
+    # w0 init: spread decays across channels (faithful to RWKV init style)
+    w0 = -5.0 + 8.0 * (jnp.arange(d) / max(d - 1, 1)) ** 0.7
+    return {
+        "tm": {  # time mix
+            "mu": jnp.full((5, d), 0.5, jnp.float32),  # r,k,v,g,w shift mix
+            "wr": linear_init(ks[0], d, d),
+            "wk": linear_init(ks[1], d, d),
+            "wv": linear_init(ks[2], d, d),
+            "wg": linear_init(ks[3], d, d),
+            "wo": linear_init(ks[4], d, d, std=std / math.sqrt(2 * cfg.n_layers)),
+            "w0": w0,                                   # (d,) decay bias
+            "wa": jax.random.normal(ks[5], (d, lora)) * 0.01,
+            "wb": jax.random.normal(ks[6], (lora, d)) * 0.01,
+            "u": jax.random.normal(ks[7], (nh, hd)) * 0.1,   # bonus
+        },
+        "cm": {  # channel mix
+            "mu": jnp.full((2, d), 0.5, jnp.float32),   # k,r shift mix
+            "wk": linear_init(ks[8], d, cfg.d_ff),
+            "wv": linear_init(ks[9], cfg.d_ff, d, std=1.0 / math.sqrt(cfg.d_ff)),
+            "wr": linear_init(ks[10], d, d),
+        },
+    }
+
+
+def _shift_mix(x, x_prev, mu):
+    """Token shift: interpolate each token with its predecessor.
+    x: (b, T, d); x_prev: (b, d) carry.  Returns mixed (b, T, d) per mu row."""
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    return x + (shifted - x) * mu  # mu broadcasts (d,) or (k, 1, 1, d)
+
+
+def rwkv_cache_init(batch: int, cfg: ModelConfig, dtype) -> RWKVCache:
+    d = cfg.d_model
+    hd = cfg.rwkv.head_dim
+    nh = d // hd
+    return RWKVCache(
+        shift_tm=jnp.zeros((batch, d), dtype),
+        shift_cm=jnp.zeros((batch, d), dtype),
+        wkv=jnp.zeros((batch, nh, hd, hd), jnp.float32),
+    )
+
+
+def _time_mix_chunked(r, k, v, lw, u, state):
+    """Chunked linear-attention recurrence.
+
+    r,k,v,lw: (b, T, H, D) fp32, lw = log-decay <= 0; u: (H, D);
+    state: (b, H, D, D).  T must be a multiple of the sub-chunk (padded by
+    caller).  Returns (out (b,T,H,D), new_state).
+    """
+    b, t, h, d = r.shape
+    c = min(CHUNK, t)
+    n = t // c
+    rs = r.reshape(b, n, c, h, d).transpose(1, 0, 3, 2, 4)   # (n,b,h,c,d)
+    ks_ = k.reshape(b, n, c, h, d).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(b, n, c, h, d).transpose(1, 0, 3, 2, 4)
+    ws = lw.reshape(b, n, c, h, d).transpose(1, 0, 3, 2, 4)
+
+    tri_lo = jnp.tril(jnp.ones((c, c), bool), k=-1)          # s < t
+
+    def body(S, xs):
+        rc, kc, vc, wc = xs                                  # (b,h,c,d)
+        cum = jnp.cumsum(wc, axis=2)                         # inclusive
+        ecum = cum - wc                                      # exclusive
+        # intra-chunk pairwise (t,s,d) exponent differences (<= 0 for s<t)
+        expo = ecum[:, :, :, None, :] - cum[:, :, None, :, :]   # (b,h,t,s,d)
+        expo = jnp.where(tri_lo[None, None, :, :, None], expo, -jnp.inf)
+        pmat = jnp.einsum("bhtd,bhsd,bhtsd->bhts", rc, kc, jnp.exp(expo))
+        diag = jnp.einsum("bhtd,bhtd,hd->bht", rc, kc,
+                          u.astype(jnp.float32))
+        pmat = pmat + jnp.eye(c)[None, None] * diag[:, :, :, None]
+        o_intra = jnp.einsum("bhts,bhsd->bhtd", pmat, vc)
+        o_inter = jnp.einsum("bhtd,bhde->bhte", rc * jnp.exp(ecum), S)
+        # state to end of chunk
+        dec_all = jnp.exp(cum[:, :, -1, :])                  # (b,h,d)
+        kd = kc * jnp.exp(cum[:, :, -1:, :] - cum)           # (b,h,c,d)
+        S_new = dec_all[..., None] * S + jnp.einsum("bhcd,bhce->bhde", kd, vc)
+        return S_new, o_intra + o_inter
+
+    state, outs = jax.lax.scan(body, state, (rs, ks_, vs, ws))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, t, h, d)
+    return out, state
+
+
+def time_mix(p, x, shift_prev, wkv_state, cfg: ModelConfig):
+    """p = params['tm']; x: (b, T, d) (already normed).  Returns
+    (y (b,T,d), new_shift (b,d), new_state)."""
+    b, t, d = x.shape
+    hd = cfg.rwkv.head_dim
+    nh = d // hd
+    mu = p["mu"]
+    xr = _shift_mix(x, shift_prev, mu[0])
+    xk = _shift_mix(x, shift_prev, mu[1])
+    xv = _shift_mix(x, shift_prev, mu[2])
+    xg = _shift_mix(x, shift_prev, mu[3])
+    xw = _shift_mix(x, shift_prev, mu[4])
+
+    r = linear(p["wr"], xr).astype(jnp.float32)
+    k = linear(p["wk"], xk).astype(jnp.float32)
+    v = linear(p["wv"], xv).astype(jnp.float32)
+    g = linear(p["wg"], xg)
+    # data-dependent decay (the Finch headline feature)
+    ww = p["w0"] + jnp.tanh(xw.astype(jnp.float32) @ p["wa"]) @ p["wb"]
+    lw = -jnp.exp(ww)                                        # log decay <= 0
+
+    # pad T to a multiple of CHUNK
+    c = min(CHUNK, max(t, 1))
+    pad = (-t) % c
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        r, k, v = zf(r), zf(k), zf(v)
+        lw = jnp.pad(lw, ((0, 0), (0, pad), (0, 0)))         # lw=0 ⇒ decay 1
+    rh = r.reshape(b, -1, nh, hd)
+    kh = k.reshape(b, -1, nh, hd)
+    vh = v.reshape(b, -1, nh, hd)
+    wh = lw.reshape(b, -1, nh, hd)
+    out, state = _time_mix_chunked(rh, kh, vh, wh,
+                                   p["u"], wkv_state.astype(jnp.float32))
+    out = out[:, :t].reshape(b, t, d)
+    y = groupnorm(out, nh).astype(x.dtype) * jax.nn.silu(g)
+    y = linear(p["wo"], y)
+    return y, x[:, -1, :], state
+
+
+def channel_mix(p, x, shift_prev):
+    """p = params['cm']; x: (b, T, d) (already normed)."""
+    xk = _shift_mix(x, shift_prev, p["mu"][0])
+    xr = _shift_mix(x, shift_prev, p["mu"][1])
+    k = jax.nn.relu(linear(p["wk"], xk))
+    k = k * k
+    return jax.nn.sigmoid(linear(p["wr"], xr)) * linear(p["wv"], k), x[:, -1, :]

@@ -1,0 +1,154 @@
+"""Scanned layer stacks.
+
+Homogeneous (or period-repeating) layers are stacked along a leading
+`repeats` axis and executed with ``lax.scan`` — one compiled block body per
+*period position* regardless of depth, which keeps HLO size and compile time
+flat for 40-80 layer models (essential on this 1-core build host, and the
+standard production pattern on TPU).
+
+A stack is ``(period, n_repeats)``: e.g. gemma3-27b is
+(5×attn_local + 1×attn) × 10 (+ a 2-layer tail stack).  Weight *sharing*
+(zamba2's shared attention block) falls out naturally: the shared params are
+closed over via ``ctx`` instead of being scanned.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.blocks import make_block
+from repro.sharding import ctx as shctx
+
+
+class Stack:
+    def __init__(self, cfg: ModelConfig, period: Sequence[str], repeats: int):
+        self.cfg = cfg
+        self.period = tuple(period)
+        self.repeats = repeats
+        self.blocks = [make_block(cfg, k) for k in self.period]
+
+    # ------------------------------------------------------------------
+    def init(self, key) -> Tuple:
+        """Params: tuple over period positions; leaves have leading
+        (repeats, ...) axis."""
+        out = []
+        for j, blk in enumerate(self.blocks):
+            keys = jax.random.split(jax.random.fold_in(key, j), self.repeats)
+            ps = [blk.init(k) for k in keys]
+            out.append(jax.tree.map(lambda *ls: jnp.stack(ls), *ps))
+        return tuple(out)
+
+    def init_cache(self, batch: int, cap: int, dtype) -> Tuple:
+        out = []
+        for blk in self.blocks:
+            spec = blk.cache_spec(batch, cap, dtype)
+            out.append(jax.tree.map(
+                lambda l: jnp.tile(l[None], (self.repeats,) + (1,) * l.ndim),
+                spec))
+        return tuple(out)
+
+    # ------------------------------------------------------------------
+    def train(self, params: Tuple, x, pos, ctx):
+        """Full-sequence forward.  Returns (x, aux_loss)."""
+        def body(carry, p_slice):
+            h, aux = carry
+            for j, blk in enumerate(self.blocks):
+                h = shctx.shard_activation(h)
+                h, a = blk.train(p_slice[j], h, pos, ctx)
+                aux = aux + jnp.asarray(a, jnp.float32)
+            return (h, aux), None
+
+        if self.cfg.remat:
+            # full recompute.  §Perf B3 measured dots_saveable policy at
+            # -2% collectives / -8% flops but +74% peak memory — the wrong
+            # trade at 671B scale, where HBM is the binding constraint.
+            body = jax.checkpoint(body)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params)
+        return x, aux
+
+    def apply(self, params: Tuple, x, pos, caches: Tuple, ctx):
+        """Prefill-chunk / decode forward with caches.
+        Returns (x, new_caches, aux).
+
+        Caches live in the scan CARRY and are updated through WINDOWED
+        dynamic-update-slices (only the rows a chunk actually writes), not
+        as scan ys.  The ys formulation shuttles every layer's full cache
+        through the loop boundary per chunk — measured at 47 TB/chip for a
+        32k prefill (§Perf A3) — while XLA aliases a loop-carried buffer in
+        place, so this path books only the written rows.
+        """
+        t = x.shape[1]
+        start = pos[0, 0]
+
+        def write_back(blk, buf_tree, new_slice, idx):
+            """Windowed write of one layer's cache updates into the stacked
+            buffers.  KV/latent rows: only the [start, start+t) window (mod W
+            for ring buffers); recurrent states: whole (small) leaves.  XLA
+            simplifies slice(DUS(orig, rows)) back to the rows, so the
+            block's full returned cache never materialises."""
+            s32 = jnp.asarray(start, jnp.int32)
+
+            def upd_rows(buf, new, ring: bool):
+                # buf: (R, b, cap, ...); new: (b, cap, ...)
+                if t == 1 and new.shape[0] == 1:
+                    # batch-1 decode: the cache shards its SEQUENCE axis
+                    # (sharding/specs.py), and a windowed DUS at a traced
+                    # position into a sequence-sharded buffer makes GSPMD
+                    # reshard (measured +240 ms collective on zamba2
+                    # long_500k); a whole-slice write keeps layouts aligned.
+                    # Batched decode caches shard over BATCH instead — the
+                    # windowed write below stays collective-free there.
+                    return buf.at[idx].set(new.astype(buf.dtype))
+                if ring:
+                    cap = buf.shape[2]
+                    slots = (s32 + jnp.arange(t, dtype=jnp.int32)) % cap
+                    rows = jnp.take(new, slots, axis=1)      # (b, t, ...)
+                    # two advanced indices (traced idx + slots) move the
+                    # indexed axes to the front: update shape is (t, b, ...)
+                    return buf.at[idx, :, slots].set(rows.swapaxes(0, 1))
+                rows = jax.lax.dynamic_slice_in_dim(new, s32, t, axis=1)
+                starts = (idx, jnp.zeros((), jnp.int32), s32) + \
+                    tuple(jnp.zeros((), jnp.int32) for _ in range(buf.ndim - 3))
+                return jax.lax.dynamic_update_slice(
+                    buf, rows[None].astype(buf.dtype), starts)
+
+            out = []
+            for name in buf_tree._fields:
+                b_f = getattr(buf_tree, name)
+                n_f = getattr(new_slice, name)
+                if b_f == () or b_f is None:
+                    out.append(b_f)
+                    continue
+                if name in ("kv", "latent"):
+                    ring = (name == "kv"
+                            and getattr(blk, "window", None) is not None)
+                    out.append(type(b_f)(**{
+                        ln: upd_rows(getattr(b_f, ln), getattr(n_f, ln), ring)
+                        for ln in b_f._fields}))
+                else:   # mamba / rwkv / cross: small states, copy whole
+                    out.append(jax.tree.map(
+                        lambda lb, nn: lb.at[idx].set(nn), b_f, n_f))
+            return type(buf_tree)(*out)
+
+        def body(carry, xs):
+            h, aux, bufs = carry
+            p_slice, idx = xs
+            new_bufs = []
+            for j, blk in enumerate(self.blocks):
+                h = shctx.shard_activation(h)
+                c_slice = jax.tree.map(
+                    lambda l: jax.lax.dynamic_index_in_dim(
+                        l, idx, axis=0, keepdims=False), bufs[j])
+                h, c_new, a = blk.apply(p_slice[j], h, pos, c_slice, ctx)
+                new_bufs.append(write_back(blk, bufs[j], c_new, idx))
+                aux = aux + jnp.asarray(a, jnp.float32)
+            return (h, aux, tuple(new_bufs)), None
+
+        idxs = jnp.arange(self.repeats, dtype=jnp.int32)
+        (x, aux, caches), _ = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32), caches), (params, idxs))
+        return x, caches, aux

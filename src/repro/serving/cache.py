@@ -1,0 +1,125 @@
+"""Per-block runtime caches.
+
+All caches are NamedTuples (pytree-friendly, scan-stackable).  KV slots carry
+their absolute position (``pos``, -1 = empty); masks everywhere derive from
+positions, so full caches, sliding-window ring buffers and QUOKA-selected
+subsets share one mask code path (see core/attention.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class KVCache(NamedTuple):
+    k: jax.Array      # (b, cap, n_kv, hd)
+    v: jax.Array      # (b, cap, n_kv, hd)
+    pos: jax.Array    # (b, cap) int32, -1 = empty
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[1]
+
+
+def kv_init(batch: int, cap: int, n_kv: int, hd: int, dtype) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, cap, n_kv, hd), dtype),
+        v=jnp.zeros((batch, cap, n_kv, hd), dtype),
+        pos=jnp.full((batch, cap), -1, jnp.int32),
+    )
+
+
+def kv_write(cache: KVCache, k_new, v_new, start) -> KVCache:
+    """Append a contiguous chunk at slot `start` (slot == absolute position
+    for linear caches).  `start` may be a traced scalar."""
+    b, t = k_new.shape[:2]
+    pos_new = (start + jnp.arange(t, dtype=jnp.int32))[None, :].repeat(b, 0)
+    z = jnp.zeros((), jnp.int32)
+    return KVCache(
+        k=jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype),
+                                       (z, jnp.asarray(start, jnp.int32), z, z)),
+        v=jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype),
+                                       (z, jnp.asarray(start, jnp.int32), z, z)),
+        pos=jax.lax.dynamic_update_slice(cache.pos, pos_new,
+                                         (z, jnp.asarray(start, jnp.int32))),
+    )
+
+
+def kv_write_ring(cache: KVCache, k_new, v_new, start) -> KVCache:
+    """Append modulo capacity (sliding-window ring buffer).  The chunk may
+    wrap; a scatter over per-token slots handles it with static shapes."""
+    b, t = k_new.shape[:2]
+    cap = cache.capacity
+    offs = jnp.arange(t, dtype=jnp.int32)
+    slots = (jnp.asarray(start, jnp.int32) + offs) % cap          # (t,)
+    pos_new = (jnp.asarray(start, jnp.int32) + offs)[None, :].repeat(b, 0)
+    return KVCache(
+        k=cache.k.at[:, slots].set(k_new.astype(cache.k.dtype)),
+        v=cache.v.at[:, slots].set(v_new.astype(cache.v.dtype)),
+        pos=cache.pos.at[:, slots].set(pos_new),
+    )
+
+
+class LatentCache(NamedTuple):
+    """DeepSeek MLA compressed cache: per-token latent + shared rope key."""
+    ckv: jax.Array    # (b, cap, kv_lora_rank)
+    krope: jax.Array  # (b, cap, qk_rope_dim)
+    pos: jax.Array    # (b, cap)
+
+    @property
+    def capacity(self) -> int:
+        return self.ckv.shape[1]
+
+
+def latent_init(batch: int, cap: int, r: int, rope: int, dtype) -> LatentCache:
+    return LatentCache(
+        ckv=jnp.zeros((batch, cap, r), dtype),
+        krope=jnp.zeros((batch, cap, rope), dtype),
+        pos=jnp.full((batch, cap), -1, jnp.int32),
+    )
+
+
+def latent_write(cache: LatentCache, ckv_new, krope_new, start) -> LatentCache:
+    b, t = ckv_new.shape[:2]
+    pos_new = (jnp.asarray(start, jnp.int32)
+               + jnp.arange(t, dtype=jnp.int32))[None, :].repeat(b, 0)
+    z = jnp.zeros((), jnp.int32)
+    s = jnp.asarray(start, jnp.int32)
+    return LatentCache(
+        ckv=jax.lax.dynamic_update_slice(cache.ckv,
+                                         ckv_new.astype(cache.ckv.dtype),
+                                         (z, s, z)),
+        krope=jax.lax.dynamic_update_slice(cache.krope,
+                                           krope_new.astype(cache.krope.dtype),
+                                           (z, s, z)),
+        pos=jax.lax.dynamic_update_slice(cache.pos, pos_new, (z, s)),
+    )
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array   # (b, d_conv - 1, conv_channels) trailing inputs
+    ssd: jax.Array    # (b, n_heads, head_dim, d_state) fp32 state
+
+
+class RWKVCache(NamedTuple):
+    shift_tm: jax.Array  # (b, d) last token entering time-mix
+    shift_cm: jax.Array  # (b, d) last token entering channel-mix
+    wkv: jax.Array       # (b, n_heads, head_dim, head_dim) fp32 state
+
+
+class CrossKV(NamedTuple):
+    """Encoder-derived cross-attention KV (whisper); computed once."""
+    k: jax.Array      # (b, n_ctx, n_kv, hd)
+    v: jax.Array
+
+
+class BlockCache(NamedTuple):
+    """Union cache for one block; unused fields are () placeholders so the
+    pytree structure stays uniform inside a scanned stack."""
+    kv: object = ()
+    latent: object = ()
+    mamba: object = ()
+    rwkv: object = ()
+    cross: object = ()

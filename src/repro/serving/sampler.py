@@ -1,0 +1,33 @@
+"""Token sampling: greedy / temperature / top-k / top-p."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0        # 0 = greedy
+    top_k: Optional[int] = None
+    top_p: Optional[float] = None
+
+
+def sample(logits, key, cfg: SamplerConfig):
+    """logits: (b, V) fp32 -> (b,) int32."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = logits / cfg.temperature
+    if cfg.top_k is not None:
+        kth = jax.lax.top_k(lg, cfg.top_k)[0][:, -1:]
+        lg = jnp.where(lg < kth, -jnp.inf, lg)
+    if cfg.top_p is not None:
+        srt = jnp.sort(lg, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(srt, axis=-1)
+        csum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(csum < cfg.top_p, axis=-1, keepdims=True)
+        kth = jnp.take_along_axis(srt, cutoff_idx, axis=-1)
+        lg = jnp.where(lg < kth, -jnp.inf, lg)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)

@@ -1,0 +1,93 @@
+"""Activation-sharding policy.
+
+GSPMD propagates shardings from the jit boundary, but inside nested scans
+(layer stack × blocked-attention k-loop) propagation can resolve to
+"replicated" for large intermediates — observed on the production mesh as
+batch-replicated attention (16x the FLOPs).  The production-grade fix is the
+standard one: explicit ``with_sharding_constraint`` on the canonical
+activation layouts at block boundaries.
+
+The policy is process-global and set by the launcher (dryrun/train/serve)
+before tracing; when unset (CPU smoke tests) every helper is a no-op.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_BATCH_AXES: Optional[Tuple[str, ...]] = None
+_MODEL_AXIS: Optional[str] = None
+_MESH = None
+
+
+def set_policy(mesh, batch_axes, model_axis="model"):
+    global _BATCH_AXES, _MODEL_AXIS, _MESH
+    _MESH = mesh
+    _BATCH_AXES = tuple(batch_axes) if batch_axes else None
+    _MODEL_AXIS = model_axis if (mesh is not None
+                                 and model_axis in mesh.axis_names) else None
+
+
+def clear_policy():
+    set_policy(None, None)
+
+
+def _axis_size(ax) -> int:
+    if _MESH is None or ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= _MESH.shape[a]
+        return n
+    return _MESH.shape[ax]
+
+
+def _ok(dim: int, ax) -> bool:
+    s = _axis_size(ax)
+    return s > 1 and dim % s == 0
+
+
+def shard_batch(x, *, heads_axis: Optional[int] = None):
+    """Constrain dim0 to the batch axes and (optionally) a heads dim to the
+    model axis.  No-op when no policy is set or dims don't divide."""
+    if _MESH is None or _BATCH_AXES is None or x.ndim == 0:
+        return x
+    spec = [None] * x.ndim
+    if _ok(x.shape[0], _BATCH_AXES):
+        spec[0] = _BATCH_AXES
+    if heads_axis is not None and _MODEL_AXIS is not None \
+            and _ok(x.shape[heads_axis], _MODEL_AXIS):
+        spec[heads_axis] = _MODEL_AXIS
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def shard_activation(x):
+    """(b, t, d) residual-stream constraint."""
+    return shard_batch(x)
+
+
+def shard_heads(x, heads_axis: int):
+    return shard_batch(x, heads_axis=heads_axis)
+
+
+def shard_spec(x, axes):
+    """Constrain with an explicit per-dim axis tuple, e.g. the MoE dispatch
+    buffer (E, C, d) -> ("model", "data", None).  "data" means the FSDP/batch
+    axes; dims that don't divide are left unsharded; no-op without policy."""
+    if _MESH is None or _BATCH_AXES is None:
+        return x
+    spec = []
+    for dim, ax in zip(x.shape, axes):
+        if ax == "data":
+            ax = _BATCH_AXES
+        elif ax == "model":
+            ax = _MODEL_AXIS
+        spec.append(ax if (ax is not None and _ok(dim, ax)) else None)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,205 @@
+"""Sharding rules: param-path → PartitionSpec.
+
+Scheme (DESIGN.md §6): tensor parallelism over ``model`` on heads / ffn /
+expert / vocab axes; FSDP over ``(pod, data)`` on the embed axis (required to
+fit deepseek-v3-671b); activations batch-sharded over ``(pod, data)``.
+Long-context decode (batch=1) shards the KV-cache *sequence* axis over
+``data`` instead.
+
+Rules are matched on the '/'-joined param path suffix; stacked layers (extra
+leading `repeats` axis from models/stack.py) are handled by right-aligning
+the spec and padding with None.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def fsdp_axes(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def _rules(F):
+    """(regex on path suffix, spec) — first match wins.  F = FSDP axes."""
+    M = "model"
+    return [
+        # embeddings / readout (vocab over model, embed over FSDP)
+        (r"embed/emb$",                 P(M, F)),
+        (r"lm_head/w$",                 P(F, M)),
+        # attention projections
+        (r"(wq|wk|wv|wg|xq|xk|xv)/w$",  P(F, M)),
+        (r"(wo|xo)/w$",                 P(M, F)),
+        # MLA
+        (r"wq_a/w$",                    P(F, None)),
+        (r"wq_b/w$",                    P(None, M)),
+        (r"wkv_a/w$",                   P(F, None)),
+        (r"(wk_b|wv_b)$",               P(None, M, None)),
+        # dense MLP
+        (r"mlp/(gate|up)/w$",           P(F, M)),
+        (r"mlp/down/w$",                P(M, F)),
+        (r"shared/(gate|up)/w$",        P(F, M)),   # deepseek shared experts
+        (r"shared/down/w$",             P(M, F)),
+        # MoE (expert-parallel over model)
+        (r"moe/router/w$",              P(F, None)),
+        (r"moe/(gate|up)$",             P(M, F, None)),
+        (r"moe/down$",                  P(M, None, F)),
+        # RWKV6
+        (r"tm/(wa)$",                   P(F, None)),
+        (r"tm/(wb)$",                   P(None, M)),
+        (r"tm/(w0)$",                   P(M)),
+        (r"tm/u$",                      P(M, None)),
+        (r"tm/mu$",                     P(None, None)),
+        (r"cm/wk/w$",                   P(F, M)),
+        (r"cm/wv/w$",                   P(M, F)),
+        (r"cm/wr/w$",                   P(F, M)),
+        # Mamba2 (x/z/dt head-aligned over model; B/C replicated)
+        (r"(z_proj|x_proj)/w$",         P(F, M)),
+        (r"bc_proj/w$",                 P(F, None)),
+        (r"dt_proj/w$",                 P(F, M)),
+        (r"conv_x_w$",                  P(None, M)),
+        (r"conv_x_b$",                  P(M)),
+        (r"conv_bc_(w|b)$",             P(None,)),
+        (r"(a_log|d_skip|dt_bias)$",    P(M)),
+        (r"mamba/norm/g$",              P(M)),
+        (r"out_proj/w$",                P(M, F)),
+        # VLM projector
+        (r"proj/fc\d/w$",               P(F, None)),
+        # MTP mixer
+        (r"mtp/mix/w$",                 P(F, None)),
+        # norms, biases, everything small: replicated
+        (r".*",                         None),
+    ]
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                    for p in path)
+
+
+_HEAD_SENSITIVE = re.compile(r"(wq|wg|xq|wo|xo)/w$|wq_b/w$|(wk_b|wv_b)$")
+_KV_SENSITIVE = re.compile(r"(wk|wv|xk|xv)/w$")
+
+
+def param_specs(cfg: ModelConfig, params_tree, mesh: Mesh):
+    """PartitionSpec tree matching `params_tree` (arrays or ShapeDtypeStructs).
+
+    Head-count semantics: a fused (d, n_heads*head_dim) projection only
+    shards over `model` when the HEAD count divides the axis — otherwise the
+    split would cut through a head (whisper 12H, internvl 14H, granite kv=8
+    on a 16-way model axis) and XLA would reshard every layer.
+    """
+    F = fsdp_axes(mesh)
+    msize = mesh.shape.get("model", 1)
+    head_ok = cfg.n_heads % msize == 0
+    kv_ok = cfg.n_kv_heads % msize == 0
+    rules = [(re.compile(pat), spec) for pat, spec in _rules(F)]
+
+    def assign(path, leaf):
+        s = _path_str(path)
+        ndim = len(leaf.shape)
+        drop_model = ((_KV_SENSITIVE.search(s) and not kv_ok)
+                      or (_HEAD_SENSITIVE.search(s) and not head_ok))
+        for pat, spec in rules:
+            if pat.search(s):
+                if drop_model and spec is not None:
+                    spec = P(*[None if ax == "model" else ax
+                               for ax in tuple(spec)])
+                if spec is None:
+                    return P()
+                spec_t = tuple(spec)
+                if len(spec_t) > ndim:          # rule broader than leaf
+                    spec_t = spec_t[-ndim:]
+                if len(spec_t) < ndim:          # stacked repeats axis etc.
+                    spec_t = (None,) * (ndim - len(spec_t)) + spec_t
+                # drop axes that do not divide the dim evenly
+                out = []
+                for dim, ax in zip(leaf.shape, spec_t):
+                    size = _axes_size(mesh, ax)
+                    out.append(ax if (ax is not None and dim % size == 0
+                                      and dim >= size) else None)
+                return P(*out)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(assign, params_tree)
+
+
+def _axes_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        return int(np.prod([mesh.shape[a] for a in ax]))
+    return mesh.shape[ax]
+
+
+def _maybe(mesh: Mesh, dim: int, ax):
+    """ax if it divides dim, else None."""
+    return ax if (ax is not None and dim % _axes_size(mesh, ax) == 0) else None
+
+
+def batch_spec(cfg: ModelConfig, batch_tree, mesh: Mesh):
+    """Input shardings: batch axis over (pod, data); everything else follows."""
+    F = fsdp_axes(mesh)
+
+    def assign(path, leaf):
+        b = leaf.shape[0] if leaf.shape else 0
+        ax = _maybe(mesh, b, F)
+        return P(ax, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(assign, batch_tree)
+
+
+def cache_specs(cfg: ModelConfig, cache_tree, mesh: Mesh):
+    """KV/state cache shardings.
+
+    batch >= |pod·data|: shard batch over FSDP axes, heads over model.
+    batch == 1 (long-context): shard the sequence/capacity axis over `data`
+    and heads over `model` (DESIGN.md §6)."""
+    F = fsdp_axes(mesh)
+    M = "model"
+
+    def assign(path, leaf):
+        s = _path_str(path)
+        shp = leaf.shape
+        nd = len(shp)
+        if nd == 0:
+            return P()
+        batch_ax = _maybe(mesh, shp[1] if nd > 1 else 0, F)  # after repeats
+        # stacked leading repeats axis -> caches look like (R, b, ...)
+        if re.search(r"/(k|v)$", s) and nd == 5:       # (R, b, cap, n_kv, hd)
+            seq_ax = None if batch_ax else _maybe(mesh, shp[2], "data")
+            return P(None, batch_ax, seq_ax, _maybe(mesh, shp[3], M), None)
+        if re.search(r"/pos$", s) and nd == 3:          # (R, b, cap)
+            seq_ax = None if batch_ax else _maybe(mesh, shp[2], "data")
+            return P(None, batch_ax, seq_ax)
+        if re.search(r"/(ckv|krope)$", s) and nd == 4:  # (R, b, cap, r)
+            seq_ax = None if batch_ax else _maybe(mesh, shp[2], "data")
+            return P(None, batch_ax, seq_ax, None)
+        if re.search(r"/ssd$", s) and nd == 5:          # (R, b, H, P, N)
+            return P(None, batch_ax, _maybe(mesh, shp[2], M), None, None)
+        if re.search(r"/conv$", s) and nd == 4:         # (R, b, K-1, ch)
+            return P(None, batch_ax, None, _maybe(mesh, shp[3], M))
+        if re.search(r"/wkv$", s) and nd == 5:          # (R, b, H, D, D)
+            return P(None, batch_ax, _maybe(mesh, shp[2], M), None, None)
+        if re.search(r"/(shift_tm|shift_cm)$", s) and nd == 3:
+            return P(None, batch_ax, None)
+        if re.search(r"/cross/", s) or re.search(r"cross", s):
+            if nd == 5:                                 # (R, b, n_ctx, kv, hd)
+                return P(None, batch_ax, None, _maybe(mesh, shp[3], M), None)
+        if nd >= 2:
+            return P(None, batch_ax, *([None] * (nd - 2)))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(assign, cache_tree)
+
+
+def to_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,64 @@
+"""Flat-npz checkpointing (no orbax offline).
+
+Param pytrees are flattened to '/'-joined key paths; restore rebuilds into a
+caller-provided template (shape/dtype checked), so it round-trips through
+optimizer state and arbitrary NamedTuple caches too.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree: Any, meta: Dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path, **flat)
+    if meta is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(meta, f, indent=2)
+
+
+def restore(path: str, template: Any) -> Any:
+    """Restore into the structure of `template` (shape/dtype validated)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    flat_t = _flatten(template)
+    if set(data.files) != set(flat_t):
+        missing = set(flat_t) - set(data.files)
+        extra = set(data.files) - set(flat_t)
+        raise ValueError(f"checkpoint mismatch: missing={missing} extra={extra}")
+    leaves_t, treedef = jax.tree_util.tree_flatten(template)
+    keys = [  # same order as template flattening
+        k for k, _ in sorted(flat_t.items())]
+    # rebuild by path order of tree_flatten_with_path (stable)
+    path_leaves = jax.tree_util.tree_flatten_with_path(template)[0]
+    new_leaves = []
+    for path_, leaf in path_leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in path_)
+        arr = data[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        new_leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return treedef.unflatten(new_leaves)
+
+
+def load_meta(path: str) -> Dict:
+    with open(path + ".meta.json") as f:
+        return json.load(f)

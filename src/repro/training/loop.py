@@ -1,0 +1,69 @@
+"""Training loop: TrainState + jitted train_step + a simple driver.
+
+The same ``make_train_step`` is what launch/dryrun.py lowers against the
+production mesh (with shardings attached), so the loop here and the dry-run
+exercise identical compute graphs.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.training import optimizer as opt
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: opt.OptState
+
+
+def init_state(model: Model, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=opt.init(params))
+
+
+def make_train_step(model: Model, ocfg: opt.OptimizerConfig
+                    ) -> Callable[[TrainState, Dict], tuple]:
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def train_step(state: TrainState, batch: Dict):
+        def loss_fn(p):
+            return model.loss(p, batch)
+        loss, grads = jax.value_and_grad(loss_fn)(state.params)
+        params, ostate, metrics = opt.apply_updates(
+            state.params, grads, state.opt, ocfg)
+        metrics["loss"] = loss
+        return TrainState(params=params, opt=ostate), metrics
+
+    return train_step
+
+
+def train(model: Model, batches: Iterable[Dict], *,
+          ocfg: Optional[opt.OptimizerConfig] = None,
+          key=None, steps: Optional[int] = None,
+          log_every: int = 20, state: Optional[TrainState] = None,
+          callback=None):
+    """Simple synchronous driver (CPU smoke / examples)."""
+    ocfg = ocfg or opt.OptimizerConfig()
+    key = key if key is not None else jax.random.PRNGKey(0)
+    state = state or init_state(model, key)
+    step_fn = jax.jit(make_train_step(model, ocfg))
+    t0 = time.time()
+    hist = []
+    for i, batch in enumerate(batches):
+        if steps is not None and i >= steps:
+            break
+        state, m = step_fn(state, batch)
+        if i % log_every == 0 or (steps and i == steps - 1):
+            loss = float(m["loss"])
+            hist.append((i, loss))
+            print(f"step {i:5d}  loss {loss:7.4f}  "
+                  f"gnorm {float(m['grad_norm']):8.3f}  "
+                  f"lr {float(m['lr']):.2e}  {time.time()-t0:6.1f}s")
+        if callback is not None:
+            callback(i, state, m)
+    return state, hist

@@ -1,0 +1,95 @@
+"""AdamW + warmup-cosine schedule + global-norm clipping (no optax on this
+host — ~the optax semantics, validated by tests/test_training.py)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+def schedule(cfg: OptimizerConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def init(params) -> OptState:
+    # moments inherit the param dtype: fp32 training keeps fp32 moments; the
+    # bf16 multi-pod dry-run keeps bf16 moments (3x param bytes total, the
+    # realistic memory budget for a 671B model on a v5e pod)
+    zeros = lambda t: jax.tree.map(jnp.zeros_like, t)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    mu=zeros(params), nu=zeros(params))
+
+
+def _decay_mask(path_leaf) -> bool:
+    """Decay matrices only — skip norms/biases/scalars (standard AdamW)."""
+    return path_leaf.ndim >= 2
+
+
+def apply_updates(params, grads, state: OptState, cfg: OptimizerConfig):
+    """Returns (new_params, new_state, metrics dict)."""
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        vf = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf
+        mhat = mf / b1c
+        vhat = vf / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if _decay_mask(p):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, mf.astype(m.dtype), vf.astype(v.dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, OptState(step=step, mu=new_m, nu=new_v), \
+        {"lr": lr, "grad_norm": gnorm}

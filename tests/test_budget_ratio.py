@@ -1,0 +1,43 @@
+"""Paper Table 2: B_SA as a fraction of the context length."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import QuokaConfig
+from repro.core.chunked_prefill import chunked_sparse_attention, output_error
+from repro.core.selection import resolve_budget, select
+from repro.data.synthetic import structured_qkv
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_resolve_budget():
+    assert resolve_budget(QuokaConfig(budget=77), 1000) == 77
+    assert resolve_budget(QuokaConfig(budget_ratio=0.25), 1000) == 250
+    assert resolve_budget(QuokaConfig(budget_ratio=0.001, keep_first=4),
+                          100) == 5     # floor at keep_first + 1
+
+
+def test_ratio_budget_selects_fraction():
+    q = jax.random.normal(KEY, (1, 16, 4, 8))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 256, 2, 8))
+    pos = jnp.arange(256)[None]
+    sel = select("quoka", q, k, k, pos, jnp.asarray(200),
+                 QuokaConfig(budget_ratio=0.25, n_queries=8))
+    assert sel.pos.shape[-1] == 64      # 25% of 256
+
+
+def test_quarter_budget_accuracy_tracks_fixed(paper_table2=True):
+    """25%-of-context budget stays close to dense (the paper's Table 2
+    finding: 'accuracy loss remains very limited even at long sequences')."""
+    q, k, v = structured_qkv(jax.random.PRNGKey(3), 2, 512, 8, 2, 32)
+    errs = {}
+    for name, cfg in {
+        "quarter": QuokaConfig(chunk_size=128, budget_ratio=0.25,
+                               n_queries=16, keep_first=4),
+        "full_budget": QuokaConfig(chunk_size=128, budget=512,
+                                   n_queries=16, keep_first=4),
+    }.items():
+        errs[name] = float(output_error(q, k, v, cfg, "quoka"))
+    assert errs["quarter"] < 0.5, errs
+    assert errs["full_budget"] < 0.05, errs

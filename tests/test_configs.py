@@ -1,0 +1,87 @@
+"""Config-system invariants for the assigned architecture pool."""
+import dataclasses
+
+import pytest
+
+from repro.configs import ASSIGNED, get_config, list_configs
+
+EXPECTED_PARAMS_B = {   # assignment name -> rough total params (1e9)
+    "gemma3-27b": (25, 29),
+    "granite-3-2b": (2, 3.3),
+    "deepseek-v3-671b": (620, 720),
+    "stablelm-3b": (2, 3.5),
+    "internvl2-1b": (0.3, 1.2),
+    "whisper-small": (0.1, 0.35),
+    "rwkv6-1.6b": (0.9, 2.0),
+    "olmoe-1b-7b": (6, 8),
+    "h2o-danube-3-4b": (3, 4.6),
+    "zamba2-7b": (5.5, 8.5),
+}
+
+EXACT_DIMS = {  # (n_layers, d_model, n_heads, n_kv, d_ff, vocab)
+    "gemma3-27b": (62, 5376, 32, 16, 21504, 262144),
+    "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+    "deepseek-v3-671b": (61, 7168, 128, 128, 18432, 129280),
+    "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+    "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+    "whisper-small": (12, 768, 12, 12, 3072, 51865),
+    "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536),
+    "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+    "h2o-danube-3-4b": (24, 3840, 32, 8, 10240, 32000),
+    "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+}
+
+
+def test_all_assigned_registered():
+    known = set(list_configs())
+    for a in ASSIGNED:
+        assert a.replace(".", "-") in known
+
+
+@pytest.mark.parametrize("arch", list(ASSIGNED))
+def test_exact_assigned_dimensions(arch):
+    cfg = get_config(arch)
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == EXACT_DIMS[arch], (got, EXACT_DIMS[arch])
+    assert cfg.source, "every assigned config must cite its source"
+
+
+@pytest.mark.parametrize("arch", list(ASSIGNED))
+def test_param_counts_in_band(arch):
+    lo, hi = EXPECTED_PARAMS_B[arch]
+    n = get_config(arch).param_count() / 1e9
+    assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo}, {hi}]"
+
+
+@pytest.mark.parametrize("arch", list(ASSIGNED))
+def test_stacks_cover_all_layers(arch):
+    cfg = get_config(arch)
+    total = sum(len(p) * r for p, r in cfg.stacks())
+    assert total == cfg.n_layers
+
+
+@pytest.mark.parametrize("arch", list(ASSIGNED))
+def test_smoke_variant_is_small(arch):
+    s = get_config(arch).smoke()
+    assert s.n_layers <= 2 and s.d_model <= 256 and s.vocab <= 512
+    if s.moe:
+        assert s.moe.n_experts <= 4
+    # family-defining structure survives the reduction
+    full_kinds = {k for p, _ in get_config(arch).stacks() for k in p}
+    smoke_kinds = {k for p, _ in s.stacks() for k in p}
+    assert smoke_kinds <= full_kinds
+    assert len(smoke_kinds) >= min(2, len(full_kinds))
+
+
+def test_moe_active_params():
+    cfg = get_config("deepseek-v3-671b")
+    assert cfg.active_param_count() < 0.08 * cfg.param_count()
+
+
+def test_quoka_defaults_follow_paper():
+    cfg = get_config("granite-3-2b")
+    assert cfg.quoka.chunk_size == 128      # B_CP (paper §4)
+    assert cfg.quoka.n_queries == 16        # N_Q  (paper §4)
+    assert cfg.quoka.scoring == "cosine"
+    assert cfg.quoka.query_agg == "max"

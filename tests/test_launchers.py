@@ -1,0 +1,40 @@
+"""Smoke tests for the CLI launchers (train/serve/dryrun arg plumbing)."""
+import os
+import subprocess
+import sys
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+ENV = {**os.environ, "PYTHONPATH": SRC}
+
+
+def _run(args, timeout=420):
+    return subprocess.run([sys.executable, "-m", *args], env=ENV,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def test_train_launcher_smoke():
+    r = _run(["repro.launch.train", "--arch", "olmoe-1b-7b", "--smoke",
+              "--steps", "3", "--batch", "2", "--seq", "64"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "loss" in r.stdout
+
+
+def test_serve_launcher_smoke():
+    r = _run(["repro.launch.serve", "--arch", "granite-3-2b", "--smoke",
+              "--prompt-len", "128", "--batch", "2", "--max-new", "3",
+              "--budget-ratio", "0.25"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "TTFT" in r.stdout
+
+
+def test_dryrun_cases_enumeration():
+    """The dry-run matrix covers 10 archs × shapes with the documented
+    long_500k skips (34 combinations)."""
+    from repro.launch.dryrun import LONG_OK, SHAPES, cases
+    cs = list(cases())
+    assert len(cs) == 34
+    archs = {a for a, _ in cs}
+    assert len(archs) == 10
+    for a, s in cs:
+        if s == "long_500k":
+            assert a in LONG_OK

@@ -1,0 +1,115 @@
+"""Hypothesis property tests on the system's invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.configs.base import QuokaConfig
+from repro.core.attention import (attention_with_positions, blocked_attention,
+                                  dense_attention, position_mask)
+from repro.core.quoka import quoka_select, select_topk, subselect_queries
+from repro.core import selection as sel_mod
+
+SETTINGS = dict(max_examples=20, deadline=None, derandomize=True,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def _arr(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+@given(seed=st.integers(0, 2**16), t=st.integers(8, 48),
+       h=st.sampled_from([2, 4]), nkv=st.sampled_from([1, 2]),
+       budget=st.integers(2, 64))
+@settings(**SETTINGS)
+def test_selection_only_picks_valid_prior_slots(seed, t, h, nkv, budget):
+    """Selected positions are always in [0, chunk_start) or -1 padding."""
+    d = 8
+    q = _arr(seed, (1, 8, h, d))
+    k = _arr(seed + 1, (1, t, nkv, d))
+    key_pos = jnp.arange(t)[None]
+    start = max(1, t // 2)
+    sel = quoka_select(q, k, k, key_pos, jnp.asarray(start),
+                       QuokaConfig(budget=budget, n_queries=4, keep_first=2))
+    pos = np.asarray(sel.pos)
+    assert ((pos == -1) | ((pos >= 0) & (pos < start))).all()
+    n_valid = (pos[0, 0] >= 0).sum()
+    assert n_valid == min(budget, t, start)
+
+
+@given(seed=st.integers(0, 2**16), scale=st.floats(0.1, 10.0))
+@settings(**SETTINGS)
+def test_quoka_selection_scale_invariant(seed, scale):
+    """Cosine scoring ⇒ the selected index SET is invariant to rescaling."""
+    q = _arr(seed, (1, 16, 4, 8))
+    k = _arr(seed + 1, (1, 64, 2, 8))
+    key_pos = jnp.arange(64)[None]
+    cfg = QuokaConfig(budget=16, n_queries=8, keep_first=0)
+    s1 = quoka_select(q, k, k, key_pos, jnp.asarray(60), cfg)
+    s2 = quoka_select(q * scale, k * scale, k * scale, key_pos,
+                      jnp.asarray(60), cfg)
+    a = np.sort(np.asarray(s1.idx), axis=-1)
+    b = np.sort(np.asarray(s2.idx), axis=-1)
+    assert (a == b).all()
+
+
+@given(seed=st.integers(0, 2**16), t=st.integers(4, 40),
+       nq=st.integers(1, 24))
+@settings(**SETTINGS)
+def test_subselect_queries_shape_and_membership(seed, t, nq):
+    q = _arr(seed, (2, t, 2, 8))
+    out = subselect_queries(q, nq)
+    assert out.shape == (2, min(t, nq) if t > nq else t, 2, 8)
+    # each kept row must be an actual input row (per batch/head)
+    qa = np.asarray(q[0, :, 0])
+    for row in np.asarray(out[0, :, 0]):
+        assert np.isclose(np.abs(qa - row).sum(axis=1).min(), 0, atol=1e-6)
+
+
+@given(seed=st.integers(0, 2**16), tq=st.integers(1, 24),
+       tk=st.integers(1, 80), causal=st.booleans())
+@settings(**SETTINGS)
+def test_attention_rows_are_convex_combinations(seed, tq, tk, causal):
+    """Attention outputs lie in the convex hull of V (max |out| <= max |v|)."""
+    q = _arr(seed, (1, tq, 2, 8))
+    k = _arr(seed + 1, (1, tk, 2, 8))
+    v = _arr(seed + 2, (1, tk, 2, 8))
+    qp = jnp.arange(tk, tk + tq)[None]
+    kp = jnp.arange(tk)[None]
+    out = attention_with_positions(q, k, v, qp, kp, causal=causal)
+    assert float(jnp.abs(out).max()) <= float(jnp.abs(v).max()) + 1e-4
+
+
+@given(seed=st.integers(0, 2**16), tq=st.integers(1, 16),
+       tk=st.integers(2, 100), window=st.one_of(st.none(),
+                                                st.integers(2, 32)))
+@settings(**SETTINGS)
+def test_blocked_equals_dense(seed, tq, tk, window):
+    q = _arr(seed, (1, tq, 4, 8))
+    k = _arr(seed + 1, (1, tk, 2, 8))
+    v = _arr(seed + 2, (1, tk, 2, 8))
+    qp = jnp.arange(tk - tq, tk)[None] if tk >= tq else jnp.arange(tq)[None]
+    kp = jnp.arange(tk)[None]
+    mask = position_mask(qp, kp, causal=True, window=window)
+    want = dense_attention(q, k, v, mask)
+    got = blocked_attention(q, k, v, qp, kp, causal=True, window=window,
+                            block_k=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-3)
+
+
+@given(seed=st.integers(0, 2**16),
+       method=st.sampled_from(["quoka", "sparq", "loki", "keydiff",
+                               "snapkv", "sample_attention"]))
+@settings(**SETTINGS)
+def test_all_methods_select_within_budget(seed, method):
+    q = _arr(seed, (1, 16, 4, 8))
+    k = _arr(seed + 1, (1, 64, 2, 8))
+    key_pos = jnp.arange(64)[None]
+    cfg = QuokaConfig(budget=12, n_queries=4, keep_first=2)
+    sel = sel_mod.select(method, q, k, k, key_pos, jnp.asarray(48), cfg)
+    pos = np.asarray(sel.pos)
+    assert pos.shape[-1] == 12
+    assert ((pos == -1) | ((pos >= 0) & (pos < 48))).all()

@@ -1,0 +1,143 @@
+"""Unit tests for the paper's Algorithm 1 (core/quoka.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import QuokaConfig
+from repro.core.attention import NEG_INF
+from repro.core.quoka import (Selected, quoka_scores, quoka_select,
+                              select_topk, subselect_queries)
+from repro.models.layers import cosine_sim, l2_normalize
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_subselect_picks_most_dissimilar():
+    """The kept queries must be exactly the N_Q lowest-CosSim(M_Q, q)."""
+    b, t, h, d = 1, 32, 1, 16
+    q = jax.random.normal(KEY, (b, t, h, d))
+    n_q = 5
+    kept = subselect_queries(q, n_q)
+    mq = q.mean(axis=1, keepdims=True)
+    s = cosine_sim(q, mq)                       # (b, t, h)
+    order = np.argsort(np.asarray(s[0, :, 0]))  # ascending cosine
+    want = set(order[:n_q].tolist())
+    got_rows = np.asarray(kept[0, :, 0, :])
+    all_rows = np.asarray(q[0, :, 0, :])
+    got = {int(np.argmin(np.linalg.norm(all_rows - r, axis=1)))
+           for r in got_rows}
+    assert got == want
+
+
+def test_subselect_noop_when_small():
+    q = jax.random.normal(KEY, (2, 8, 4, 16))
+    assert subselect_queries(q, 16) is q
+
+
+def test_preaggregation_equals_post_mean():
+    """Paper §3.3: averaging normalised queries inside a KV group BEFORE the
+    matmul equals averaging per-head cosine scores (linearity)."""
+    b, nq, h, n_kv, d, t = 2, 4, 8, 2, 16, 64
+    q = jax.random.normal(KEY, (b, nq, h, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, t, n_kv, d))
+    valid = jnp.ones((b, t), bool)
+    cfg = QuokaConfig(query_agg="max")
+    got = quoka_scores(q, k, valid, cfg)
+    # reference: per attention head cosine, then mean over the group
+    qn = l2_normalize(q.astype(jnp.float32))
+    kn = l2_normalize(k.astype(jnp.float32))
+    s = jnp.einsum("bnhd,bthd->bhnt", qn,
+                   jnp.repeat(kn, h // n_kv, axis=2))
+    s_group = s.reshape(b, n_kv, h // n_kv, nq, t).mean(axis=2)
+    want = s_group.max(axis=2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_scores_masked_invalid():
+    b, nq, h, n_kv, d, t = 1, 2, 2, 1, 8, 16
+    q = jax.random.normal(KEY, (b, nq, h, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (b, t, n_kv, d))
+    valid = jnp.arange(t)[None, :] < 10
+    s = quoka_scores(q, k, valid, QuokaConfig())
+    assert bool((s[:, :, 10:] <= NEG_INF / 2).all())
+    assert bool((s[:, :, :10] > NEG_INF / 2).all())
+
+
+def test_select_topk_budget_and_positions():
+    b, n_kv, t, d = 2, 2, 64, 8
+    k = jax.random.normal(KEY, (b, t, n_kv, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 1), (b, t, n_kv, d))
+    key_pos = jnp.arange(t)[None].repeat(b, 0)
+    scores = jax.random.normal(jax.random.fold_in(KEY, 2),
+                               (b, n_kv, t)).astype(jnp.float32)
+    sel = select_topk(scores, k, v, key_pos, budget=16)
+    assert sel.k.shape == (b, 16, n_kv, d)
+    assert sel.pos.shape == (b, n_kv, 16)
+    # gathered values must equal source rows at the selected slots
+    for bi in range(b):
+        for hi in range(n_kv):
+            for j in range(16):
+                slot = int(sel.idx[bi, hi, j])
+                np.testing.assert_allclose(
+                    np.asarray(sel.k[bi, j, hi]), np.asarray(k[bi, slot, hi]))
+
+
+def test_select_topk_respects_keep_first():
+    """Sink protection: the first keep_first positions are always selected."""
+    b, n_kv, t, d = 1, 1, 64, 8
+    k = jax.random.normal(KEY, (b, t, n_kv, d))
+    key_pos = jnp.arange(t)[None]
+    scores = jnp.where(jnp.arange(t)[None, None, :] < 4, -5.0, 1.0)
+    scores = scores.astype(jnp.float32)
+    sel = select_topk(scores, k, k, key_pos, budget=8, keep_first=4)
+    got = set(np.asarray(sel.pos[0, 0]).tolist())
+    assert {0, 1, 2, 3} <= got
+
+
+def test_select_fewer_valid_than_budget():
+    b, n_kv, t, d = 1, 1, 32, 4
+    k = jax.random.normal(KEY, (b, t, n_kv, d))
+    key_pos = jnp.arange(t)[None]
+    q = jax.random.normal(KEY, (b, 8, 2, d))
+    sel = quoka_select(q, k, k, key_pos, jnp.asarray(5),
+                       QuokaConfig(budget=16, n_queries=4, keep_first=0))
+    valid = np.asarray(sel.pos[0, 0]) >= 0
+    assert valid.sum() == 5                      # only 5 selectable
+    assert (np.asarray(sel.pos[0, 0])[valid] < 5).all()
+
+
+def test_theorem1_bound():
+    """Numeric check of Theorem 1: for CosSim(k,q*)=beta>0 and
+    CosSim(M_Q,k)=alpha<0, CosSim(M_Q,q*) <= 1 + a*b - a^2/2 - b^2/2."""
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        d = 16
+        k = rng.normal(size=d)
+        q = rng.normal(size=d)
+        mq = rng.normal(size=d)
+        cs = lambda a, b: float(np.dot(a, b) /
+                                (np.linalg.norm(a) * np.linalg.norm(b)))
+        beta, alpha = cs(k, q), cs(mq, k)
+        if beta <= 0 or alpha >= 0:
+            continue
+        bound = 1 + alpha * beta - 0.5 * alpha ** 2 - 0.5 * beta ** 2
+        assert cs(mq, q) <= bound + 1e-9
+
+
+def test_scoring_scale_invariance():
+    """Cosine scoring must be invariant to per-vector scaling (the paper's
+    argument for cosine over dot)."""
+    b, nq, h, n_kv, d, t = 1, 4, 4, 2, 8, 32
+    q = jax.random.normal(KEY, (b, nq, h, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 3), (b, t, n_kv, d))
+    valid = jnp.ones((b, t), bool)
+    cfg = QuokaConfig(scoring="cosine")
+    s1 = quoka_scores(q, k, valid, cfg)
+    s2 = quoka_scores(q * 7.3, k * 0.11, valid, cfg)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-4, atol=1e-5)
+    cfg_dot = QuokaConfig(scoring="dot")
+    s3 = quoka_scores(q, k, valid, cfg_dot)
+    assert not np.allclose(np.asarray(s1), np.asarray(s3), atol=1e-3)
