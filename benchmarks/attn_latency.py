@@ -1,8 +1,13 @@
 """Paper Figure 5(a)/(c): standalone attention-module latency across prompt
-lengths — dense chunked prefill vs QUOKA vs the strongest baselines.
+lengths — dense chunked prefill vs QUOKA vs the strongest baselines, with a
+KERNEL-BACKEND axis (xla vs pallas_interpret; "pallas" on a real TPU) so the
+JSON output records xla-vs-kernel trajectories per length.
 
 This container is a CPU host, matching the paper's Intel-Xeon setting
-(Fig 5c); `derived` reports the speedup over dense at each length.
+(Fig 5c); `derived` reports the speedup over dense at each length.  The
+interpreted Pallas backend executes the kernel body per grid cell in Python
+— it validates the dispatch path, not kernel speed — so it only runs at the
+shortest length (`INTERPRET_MAX_T`).
 """
 from __future__ import annotations
 
@@ -11,7 +16,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, header, time_fn
+from benchmarks.common import (INTERPRET_MAX_T, backend_axis, emit, header,
+                               json_mark, time_fn, write_json)
 from repro.configs.base import QuokaConfig
 from repro.core.chunked_prefill import chunked_sparse_attention
 
@@ -20,23 +26,37 @@ METHODS = ("full", "quoka", "sample_attention", "sparq")
 H, NKV, D = 16, 4, 64           # qwen3-4b-ish head geometry (scaled)
 
 
-def run():
+def run(lengths=LENGTHS):
     header("attn_latency (Fig 5a/c)")
+    mark = json_mark()
     key = jax.random.PRNGKey(0)
     cfg = QuokaConfig(chunk_size=128, budget=1024, n_queries=16)
-    for t in LENGTHS:
+    for t in lengths:
         q = jax.random.normal(key, (1, t, H, D), jnp.float32)
         k = jax.random.normal(jax.random.fold_in(key, 1), (1, t, NKV, D))
         v = jax.random.normal(jax.random.fold_in(key, 2), (1, t, NKV, D))
-        base_us = None
-        for m in METHODS:
-            fn = jax.jit(functools.partial(
-                chunked_sparse_attention, cfg=cfg, method=m))
-            us = time_fn(fn, q, k, v, iters=3)
-            if m == "full":
-                base_us = us
-            emit(f"attn_latency/T{t}/{m}", us,
-                 f"speedup={base_us/us:.2f}x")
+        for backend in backend_axis():
+            if backend == "pallas_interpret" and t > INTERPRET_MAX_T:
+                continue
+            iters = 1 if backend == "pallas_interpret" else 3
+            base_us = None
+            for m in METHODS:
+                if m == "full" and backend != "xla":
+                    continue        # dense reference is backend-free
+                # backend passed EXPLICITLY so the recorded label always
+                # matches what ran (an exported REPRO_BACKEND would
+                # otherwise override cfg.backend)
+                fn = jax.jit(functools.partial(
+                    chunked_sparse_attention, cfg=cfg, method=m,
+                    backend=backend))
+                us = time_fn(fn, q, k, v, warmup=1, iters=iters)
+                if m == "full":
+                    base_us = us
+                derived = f"speedup={base_us/us:.2f}x" if base_us else ""
+                emit(f"attn_latency/T{t}/{backend}/{m}", us, derived,
+                     bench="attn_latency", seq_len=t, backend=backend,
+                     method=m)
+    write_json("attn_latency", mark)
 
 
 if __name__ == "__main__":

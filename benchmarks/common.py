@@ -1,18 +1,59 @@
-"""Shared benchmark utilities: wall-clock timing of jitted fns + CSV rows."""
+"""Shared benchmark utilities: wall-clock timing of jitted fns, CSV rows,
+and a structured JSON sink (benchmarks/out/<name>.json) so backend-vs-backend
+trajectories can be tracked across runs."""
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable, List
+from typing import Callable, Dict, List
 
 import jax
 
 ROWS: List[str] = []
+RECORDS: List[Dict] = []
+
+# interpreted Pallas kernels execute the kernel body per grid cell in
+# Python — they validate the dispatch path, not speed — so backend-axis
+# benchmarks cap them at this length
+INTERPRET_MAX_T = 1024
 
 
-def emit(name: str, us_per_call: float, derived: str = ""):
+def backend_axis():
+    """Backends every backend-axis benchmark sweeps: xla always; the
+    compiled kernel on TPU, the interpreted kernel elsewhere."""
+    from repro.kernels import ops as kops
+    auto = kops.resolve_backend()
+    return ("xla", "pallas") if auto == "pallas" else ("xla",
+                                                       "pallas_interpret")
+
+
+def emit(name: str, us_per_call: float, derived: str = "", **fields):
+    """Record one benchmark point.  ``fields`` (e.g. backend=, method=,
+    seq_len=) go into the JSON record; the CSV row keeps the legacy
+    ``name,us,derived`` shape."""
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
+    RECORDS.append({"name": name, "us_per_call": us_per_call,
+                    "derived": derived, **fields})
     print(row, flush=True)
+
+
+def json_mark() -> int:
+    """Snapshot the record count; pass to write_json to dump only the
+    records a single benchmark produced."""
+    return len(RECORDS)
+
+
+def write_json(bench: str, start: int = 0,
+               out_dir: str = os.path.join(os.path.dirname(__file__), "out")):
+    """Dump RECORDS[start:] to benchmarks/out/<bench>.json."""
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{bench}.json")
+    with open(path, "w") as f:
+        json.dump(RECORDS[start:], f, indent=2)
+    print(f"# wrote {len(RECORDS) - start} records -> {path}", flush=True)
+    return path
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:

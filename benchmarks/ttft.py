@@ -1,5 +1,7 @@
 """Paper Figure 5(b)/(d): end-to-end time-to-first-token across prompt
-lengths (small model, B_CP=128 chunked prefill), dense vs QUOKA."""
+lengths (small model, B_CP=128 chunked prefill), dense vs QUOKA, with a
+kernel-backend axis recorded in the JSON output (xla vs pallas_interpret on
+CPU hosts, xla vs pallas on TPU)."""
 from __future__ import annotations
 
 import dataclasses
@@ -8,7 +10,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, header
+from benchmarks.common import (INTERPRET_MAX_T, backend_axis, emit, header,
+                               json_mark, write_json)
 from repro.configs import get_config
 from repro.models.model import build_model
 from repro.serving.engine import Engine
@@ -16,8 +19,9 @@ from repro.serving.engine import Engine
 LENGTHS = (1024, 2048, 4096)
 
 
-def run():
+def run(lengths=LENGTHS):
     header("ttft (Fig 5b/d)")
+    mark = json_mark()
     cfg = get_config("qwen3-4b").smoke(n_layers=4, d_model=256, n_heads=8,
                                        n_kv_heads=2, d_ff=512, vocab=2048)
     cfg = dataclasses.replace(
@@ -26,17 +30,25 @@ def run():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    for t in LENGTHS:
+    for t in lengths:
         toks = jnp.asarray(rng.integers(3, cfg.vocab, (1, t)), jnp.int32)
         base = None
-        for m in ("full", "quoka"):
-            eng = Engine(model, params, method=m)
-            r = eng.generate({"tokens": toks}, 1)     # warm compile
-            r = eng.generate({"tokens": toks}, 1)
-            us = r.ttft_s * 1e6
-            if m == "full":
-                base = us
-            emit(f"ttft/T{t}/{m}", us, f"speedup={base/us:.2f}x")
+        for backend in backend_axis():
+            if backend == "pallas_interpret" and t > INTERPRET_MAX_T:
+                continue
+            for m in ("full", "quoka"):
+                if m == "full" and backend != "xla":
+                    continue        # dense prefill is backend-free
+                eng = Engine(model, params, method=m, backend=backend)
+                r = eng.generate({"tokens": toks}, 1)     # warm compile
+                r = eng.generate({"tokens": toks}, 1)
+                us = r.ttft_s * 1e6
+                if m == "full":
+                    base = us
+                derived = f"speedup={base/us:.2f}x" if base else ""
+                emit(f"ttft/T{t}/{backend}/{m}", us, derived,
+                     bench="ttft", seq_len=t, backend=backend, method=m)
+    write_json("ttft", mark)
 
 
 if __name__ == "__main__":

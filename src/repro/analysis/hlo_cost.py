@@ -156,7 +156,12 @@ def _operand_names(rhs: str) -> List[str]:
     names = []
     for tok in m.group(1).split(","):
         tok = tok.strip()
-        tm = re.match(r"%?([\w.\-]+)$", tok)
+        # Compiled HLO writes TYPED operands ("f32[64,64]{1,0} %name");
+        # hand-written HLO may use bare "%name".  Take the trailing
+        # identifier; shape fragments produced by splitting tuple-shaped
+        # operands on "," simply fail the lookup later (0 bytes), exactly
+        # like before.
+        tm = re.search(r"%([\w.\-]+)$", tok) or re.match(r"([\w.\-]+)$", tok)
         if tm:
             names.append(tm.group(1))
     return names

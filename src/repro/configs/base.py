@@ -94,6 +94,10 @@ class QuokaConfig:
     # chunk's own KV (the paper keeps the chunk KV by construction, eq. (2)).
     keep_first: int = 4
     method: str = "quoka"          # selection method (see core/selection.py)
+    # kernel backend for the scoring + post-selection-attention hot path:
+    # "auto" | "xla" | "pallas_interpret" | "pallas" — resolved by
+    # kernels/ops.py::resolve_backend (env REPRO_BACKEND overrides "auto")
+    backend: str = "auto"
     # method-specific knobs for the baselines
     rank: int = 64                 # SparQ / Loki down-projection dim
     lim_layers: int = 2            # LessIsMore: score every k-th layer

@@ -20,7 +20,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import QuokaConfig
 from repro.core import selection as sel_mod
-from repro.core.attention import dense_attention, attention_with_positions
+from repro.core.attention import attention_with_positions
+from repro.kernels import ops as kops
 
 
 def dense_causal_reference(q, k, v):
@@ -32,13 +33,18 @@ def dense_causal_reference(q, k, v):
 
 def chunked_sparse_attention(q, k, v, cfg: QuokaConfig,
                              method: Optional[str] = None,
-                             unroll: bool = False):
+                             unroll: bool = False,
+                             backend: Optional[str] = None):
     """Chunked prefill with per-chunk KV selection.
 
     q: (b, T, h, d); k, v: (b, T, n_kv, d); T % cfg.chunk_size == 0.
+    ``backend`` explicitly pins the kernel backend (outranks the
+    REPRO_BACKEND env var and ``cfg.backend``; see kernels/ops.py).
     Returns (b, T, h, d) attention outputs (softmax over the selected set —
     the quantity eq. (4) asks ``f`` to preserve).
     """
+    import dataclasses
+
     method = method or cfg.method
     b, t, h, d = q.shape
     n_kv = k.shape[2]
@@ -50,6 +56,10 @@ def chunked_sparse_attention(q, k, v, cfg: QuokaConfig,
     if method == "full":
         return dense_causal_reference(q, k, v)
 
+    # resolve once and bake into cfg so the scoring stage (inside
+    # sel_mod.select) dispatches consistently with the attention stage
+    backend = kops.resolve_backend(backend, cfg)
+    cfg = dataclasses.replace(cfg, backend=backend)
     qs = q.reshape(b, nc, bcp, h, d).swapaxes(0, 1)
     ks = k.reshape(b, nc, bcp, n_kv, d).swapaxes(0, 1)
     vs = v.reshape(b, nc, bcp, n_kv, d).swapaxes(0, 1)
@@ -58,16 +68,17 @@ def chunked_sparse_attention(q, k, v, cfg: QuokaConfig,
     def one_chunk(i, qc, kc, vc, pc):
         start = pc[0, 0]
         sel = sel_mod.select(method, qc, k, v, pos_all, start, cfg)
+        # [selected budget | chunk] layout: the budget is an unconditioned
+        # prefix (every gathered key is strictly before the chunk by
+        # construction), the chunk is causal w.r.t. chunk-local indices —
+        # exactly the flash kernel's static `boundary` mask, with budget
+        # padding masked via per-KV-head k_valid (sel.pos == -1).
         k_cat = jnp.concatenate([sel.k, kc], axis=1)
         v_cat = jnp.concatenate([sel.v, vc], axis=1)
-        m_sel = jnp.broadcast_to(
-            (sel.pos[:, :, None, :] >= 0),
-            (b, n_kv, bcp, sel.pos.shape[-1]))
-        tri = jnp.broadcast_to(
-            jnp.tril(jnp.ones((bcp, bcp), bool))[None, None],
-            (b, n_kv, bcp, bcp))
-        mask = jnp.concatenate([m_sel, tri], axis=-1)
-        return dense_attention(qc, k_cat, v_cat, mask)
+        k_valid = jnp.concatenate(
+            [sel.pos >= 0, jnp.ones((b, n_kv, bcp), bool)], axis=-1)
+        return kops.attention(qc, k_cat, v_cat, k_valid, causal=True,
+                              boundary=sel.pos.shape[-1], backend=backend)
 
     if unroll:
         outs = [one_chunk(i, qs[i], ks[i], vs[i], ps[i]) for i in range(nc)]

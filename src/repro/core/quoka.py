@@ -41,11 +41,23 @@ class Selected(NamedTuple):
 # stage 1: query subselection
 # ----------------------------------------------------------------------------
 
-def subselect_queries(q: jax.Array, n_queries: int) -> jax.Array:
+def subselect_queries(q: jax.Array, n_queries: int,
+                      n_kv: Optional[int] = None) -> jax.Array:
     """Keep the ``n_queries`` queries with lowest CosSim to the mean query.
 
-    q: (b, t, h, d)  ->  (b, n_queries, h, d), independently per (b, h).
+    q: (b, t, h, d)  ->  (b, n_queries, h, d).
     When t <= n_queries the input is returned unchanged (Algorithm 1 line 1).
+
+    With ``n_kv`` given, selection is GROUP-COHERENT: the dissimilarity score
+    is averaged over each GQA group and every head of a group keeps the SAME
+    token indices.  This is required for the downstream pre-aggregation
+    (quoka_scores averages normalised queries inside each group): with
+    independent per-head top-k, slot i holds a *different token* per head and
+    the group mean blends unrelated queries, washing outliers out before the
+    max.  Outlier-ness is token-level in GQA models (heads of a group retrieve
+    the same token — the premise of §3.3's pre-aggregation), so the group-mean
+    score preserves exactly the queries pre-aggregation can represent.
+    Without ``n_kv`` (or with n_kv == h) selection is per-head as before.
     """
     b, t, h, d = q.shape
     if t <= n_queries:
@@ -55,7 +67,13 @@ def subselect_queries(q: jax.Array, n_queries: int) -> jax.Array:
     num = jnp.sum(qf * mq, axis=-1)
     den = (jnp.linalg.norm(qf, axis=-1) * jnp.linalg.norm(mq, axis=-1) + 1e-8)
     s_q = -(num / den)                                           # (b, t, h)
-    _, top_i = jax.lax.top_k(s_q.transpose(0, 2, 1), n_queries)  # (b, h, N_Q)
+    if n_kv is not None and n_kv != h:
+        group = h // n_kv
+        s_g = s_q.reshape(b, t, n_kv, group).mean(axis=3)        # (b, t, n_kv)
+        _, top_g = jax.lax.top_k(s_g.transpose(0, 2, 1), n_queries)
+        top_i = jnp.repeat(top_g, group, axis=1)                 # (b, h, N_Q)
+    else:
+        _, top_i = jax.lax.top_k(s_q.transpose(0, 2, 1), n_queries)
     gathered = jnp.take_along_axis(
         q.transpose(0, 2, 1, 3), top_i[..., None], axis=2)       # (b, h, N_Q, d)
     return gathered.transpose(0, 2, 1, 3)
@@ -72,6 +90,12 @@ def quoka_scores(q: jax.Array, k: jax.Array, valid: jax.Array,
     q: (b, N_Q, n_q_heads, d) already sub-selected; k: (b, T, n_kv, d);
     valid: (b, T) bool (selectable prior-context slots).
     Returns fp32 scores (b, n_kv, T), NEG_INF on invalid slots.
+
+    Backend dispatch: the default cosine+max configuration routes through
+    ``kernels/ops.py::score`` (the fused Pallas scoring kernel, or its XLA
+    twin below) per the resolved ``cfg.backend``.  The Table-9/10 ablation
+    arms ("dot" scoring, "mean" aggregation) are outside the kernel's fixed
+    semantics and always take the einsum path.
     """
     b, nq, h, d = q.shape
     n_kv = k.shape[2]
@@ -86,6 +110,13 @@ def quoka_scores(q: jax.Array, k: jax.Array, valid: jax.Array,
 
     # pre-aggregation: mean of (normalised) queries inside each KV group
     qbar = jnp.mean(qn.reshape(b, nq, n_kv, group, d), axis=3)   # (b,N_Q,n_kv,d)
+
+    if cfg.scoring == "cosine" and cfg.query_agg == "max":
+        from repro.kernels import ops as kops
+        backend = kops.resolve_backend(cfg=cfg)
+        if backend != "xla":
+            # fused kernel path: Q̄ stays VMEM-resident, K streamed once
+            return kops.score(qbar, k, valid, backend=backend)
     # FUSED key normalisation (§Perf A1): scores are divided by per-key norms
     # instead of materialising a normalised (fp32!) copy of the whole K cache
     # — K is streamed once, in its storage dtype, by a single einsum.  This
@@ -160,7 +191,7 @@ def quoka_select(q: jax.Array, k: jax.Array, v: jax.Array,
     ``chunk_start`` may be traced (scan carry); selection considers only
     slots with 0 <= pos < chunk_start (the prior context, eq. (2)).
     """
-    qs = subselect_queries(q, cfg.n_queries)
+    qs = subselect_queries(q, cfg.n_queries, n_kv=k.shape[2])
     valid = (key_pos >= 0) & (key_pos < chunk_start)
     scores = quoka_scores(qs, k, valid, cfg)
     return select_topk(scores, k, v, key_pos, budget or cfg.budget,

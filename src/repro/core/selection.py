@@ -148,7 +148,8 @@ def keydiff_scores(q, k, valid, cfg: QuokaConfig):
 
 def compute_scores(method: str, q, k, valid, cfg: QuokaConfig):
     if method == "quoka":
-        return quoka_scores(subselect_queries(q, cfg.n_queries), k, valid, cfg)
+        qs = subselect_queries(q, cfg.n_queries, n_kv=k.shape[2])
+        return quoka_scores(qs, k, valid, cfg)
     if method == "sample_attention":
         return sample_attention_scores(q, k, valid, cfg)
     if method == "sparq":

@@ -101,7 +101,7 @@ def needle_accuracy(model, params, batch: Dict, method: str,
 
 def structured_qkv(key, b: int, t: int, h: int, n_kv: int, d: int,
                    outlier_frac: float = 0.08, n_needles: int = 24,
-                   n_sinks: int = 4, sharp: float = 6.0
+                   n_sinks: int = 4, sharp: float = 8.0
                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Q/K geometry mirroring the paper's Figure 2:
 
@@ -111,7 +111,16 @@ def structured_qkv(key, b: int, t: int, h: int, n_kv: int, d: int,
       * a few OUTLIER queries (low CosSim to the mean — high S_q) align
         sharply with specific NEEDLE keys scattered in the context —
         "higher S_q correlates with larger max_k(A)" (Fig 2c);
-      * the key cluster has negative cosine with the mean query (Fig 2b).
+      * the key cluster has negative cosine with the mean query (Fig 2b);
+      * needle positions carry DISTINCTIVE (large-norm) values: retrieving
+        them matters for the output, as in real retrieval heads — an evicted
+        needle is an O(1) output error, not noise.
+
+    Scales are set so the geometry holds at the SOFTMAX level, not just in
+    cosine space: concentration requires the sink/needle logit to clear the
+    diffuse cluster by ~log(t) (≈6 for t=512), otherwise every query's mass
+    is spread over the whole cluster and mean-mass selection is trivially
+    L2-optimal — the regime the paper's Figure 2 explicitly contrasts with.
 
     Mean/uniform aggregation washes the outliers out; QUOKA's
     dissimilar-query subselection keeps them.  Returns q (b,t,h,d),
@@ -124,9 +133,10 @@ def structured_qkv(key, b: int, t: int, h: int, n_kv: int, d: int,
     # keys: anisotropic cluster along +dk (negative cosine with M_Q)
     k_noise = jax.random.normal(ks[1], (b, t, n_kv, d)) * 0.5
     k = dk * 1.5 + k_noise
-    # sinks: aligned WITH the bulk queries so near-mean queries hit them
+    # sinks: aligned WITH the bulk queries, with enough norm that near-mean
+    # queries CONCENTRATE on them (logit gap > log t over the cluster)
     sink = (jnp.arange(t) < n_sinks)[None, :, None, None]
-    k = jnp.where(sink, dq * 2.0 + k_noise * 0.2, k)
+    k = jnp.where(sink, dq * 16.0 + k_noise * 0.2, k)
     # needles: distinct off-cluster directions at fixed scattered positions
     needle_pos = jnp.asarray(
         np.linspace(n_sinks + 3, t - 8, n_needles).astype(np.int32))
@@ -138,9 +148,11 @@ def structured_qkv(key, b: int, t: int, h: int, n_kv: int, d: int,
     k = jnp.where(is_needle[None, :, None, None],
                   ndir_full[None, :, None, :] + k_noise * 0.2, k)
     v = jax.random.normal(ks[4], (b, t, n_kv, d))
+    # needle values are distinctive: missing one costs O(1) output error
+    v = jnp.where(is_needle[None, :, None, None], v * 3.0, v)
     # bulk queries: tight cluster along dq
     q_noise = jax.random.normal(ks[5], (b, t, h, d)) * 0.3
-    q = dq * 1.5 + q_noise
+    q = dq * 2.5 + q_noise
     # outlier queries: sharply aligned with a random NEEDLE key.  Outlier-ness
     # and the target are TOKEN-level (shared across heads) — heads inside a
     # GQA group look at the same retrieved token, which is exactly why the

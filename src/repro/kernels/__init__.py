@@ -1,9 +1,13 @@
 """Pallas TPU kernels (validated on CPU via interpret=True).
 
-  flash_attention  -- blockwise online-softmax attention with QUOKA's
-                      [selected-prefix | causal-chunk] mask
-  quoka_score      -- fused normalise + QbarK^T + max-over-queries scoring
+  attention  -- blockwise online-softmax attention with QUOKA's
+                [selected-prefix | causal-chunk] mask
+  score      -- fused normalise + QbarK^T + max-over-queries scoring
 
-Use through repro.kernels.ops (layout conversion + backend dispatch).
+Use through repro.kernels.ops (layout conversion + backend dispatch);
+``resolve_backend`` picks "xla" | "pallas_interpret" | "pallas" from the
+explicit argument, the REPRO_BACKEND env var, QuokaConfig.backend, or
+hardware detection — in that order.
 """
-from repro.kernels.ops import flash_attention, quoka_score  # noqa: F401
+from repro.kernels.ops import (attention, flash_attention,  # noqa: F401
+                               quoka_score, resolve_backend, score)

@@ -28,9 +28,13 @@ from jax.experimental import pallas as pl
 try:  # TPU compiler params are optional on CPU/interpret
     from jax.experimental.pallas import tpu as pltpu
     _SCRATCH = lambda shape, dtype: pltpu.VMEM(shape, dtype)
+    # renamed TPUCompilerParams -> CompilerParams across jax releases
+    _COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or \
+        getattr(pltpu, "TPUCompilerParams", None)
 except Exception:  # pragma: no cover
     pltpu = None
     _SCRATCH = None
+    _COMPILER_PARAMS = None
 
 NEG_INF = -1e30
 
@@ -56,7 +60,7 @@ def _kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
     iq = pl.program_id(2)
     qi = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
     kj = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
-    mask = valid_ref[0][None, :]
+    mask = valid_ref[0, 0][None, :]
     if causal:
         mask = mask & ((kj < boundary) | ((kj - boundary) <= qi))
 
@@ -88,8 +92,10 @@ def flash_attention_bhtd(q, k, v, k_valid=None, *, causal: bool = True,
                          boundary: int = 0, scale: Optional[float] = None,
                          block_q: int = 128, block_k: int = 128,
                          interpret: bool = True):
-    """q: (b, h, tq, d); k, v: (b, h_kv, tk, d); k_valid: (b, tk) bool.
-    Shapes are padded to block multiples internally."""
+    """q: (b, h, tq, d); k, v: (b, h_kv, tk, d); k_valid: bool, either
+    (b, tk) shared across heads or (b, h_kv, tk) per-KV-head (gathered
+    selection budgets differ per KV head).  Shapes are padded to block
+    multiples internally."""
     b, h, tq, d = q.shape
     h_kv, tk = k.shape[1], k.shape[2]
     g = h // h_kv
@@ -101,14 +107,16 @@ def flash_attention_bhtd(q, k, v, k_valid=None, *, causal: bool = True,
     pk = (-tk) % block_k
     pd = (-d) % 128 if not interpret else 0
     if k_valid is None:
-        k_valid = jnp.ones((b, tk), bool)
+        k_valid = jnp.ones((b, h_kv, tk), bool)
+    elif k_valid.ndim == 2:
+        k_valid = jnp.broadcast_to(k_valid[:, None, :], (b, h_kv, tk))
     if pq or pd:
         q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, pd)))
     if pk or pd:
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, pd)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, pd)))
     if pk:
-        k_valid = jnp.pad(k_valid, ((0, 0), (0, pk)))
+        k_valid = jnp.pad(k_valid, ((0, 0), (0, 0), (0, pk)))
     tq_p, tk_p, d_p = tq + pq, tk + pk, d + pd
     n_k = tk_p // block_k
     grid = (b, h, tq_p // block_q, n_k)
@@ -118,8 +126,8 @@ def flash_attention_bhtd(q, k, v, k_valid=None, *, causal: bool = True,
         block_q=block_q, block_k=block_k, n_k=n_k)
 
     kwargs = {}
-    if not interpret and pltpu is not None:  # pragma: no cover (TPU only)
-        kwargs["compiler_params"] = pltpu.CompilerParams(
+    if not interpret and _COMPILER_PARAMS is not None:  # pragma: no cover
+        kwargs["compiler_params"] = _COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary"))
     out = pl.pallas_call(
@@ -132,7 +140,8 @@ def flash_attention_bhtd(q, k, v, k_valid=None, *, causal: bool = True,
                          lambda bi, hi, iq, ik, g=g: (bi, hi // g, ik, 0)),
             pl.BlockSpec((1, 1, block_k, d_p),
                          lambda bi, hi, iq, ik, g=g: (bi, hi // g, ik, 0)),
-            pl.BlockSpec((1, block_k), lambda bi, hi, iq, ik: (bi, ik)),
+            pl.BlockSpec((1, 1, block_k),
+                         lambda bi, hi, iq, ik, g=g: (bi, hi // g, ik)),
         ],
         out_specs=pl.BlockSpec((1, 1, block_q, d_p),
                                lambda bi, hi, iq, ik: (bi, hi, iq, 0)),

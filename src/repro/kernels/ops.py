@@ -1,14 +1,44 @@
-"""Framework-facing kernel wrappers.
+"""Framework-facing kernel dispatch facade.
 
-Dispatch policy: ``backend="auto"`` uses the Pallas kernels when a TPU is
-present (compiled) and otherwise either the XLA reference (fast on CPU) or
-the interpreted kernel (slow; used by the allclose test-suite via
-``backend="pallas_interpret"``).
+Every attention/scoring call in the system (chunked prefill, the serving
+engine, the standalone accuracy harness, benchmarks) goes through the two
+entry points here instead of hand-rolling masks + ``dense_attention``:
 
-Activations use the framework BTHD layout; kernels are BHTD.
+  * ``attention(q, k, v, k_valid, causal=, boundary=, backend=)`` —
+    Algorithm 2's post-selection attention.  The first ``boundary`` keys are
+    an unconditioned prefix (the gathered selection budget, all strictly
+    before the chunk by construction), the remaining keys are causal with
+    respect to chunk-local indices; ``k_valid`` masks budget padding and may
+    be per-KV-head ((b, n_kv, tk)) since gathered budgets differ per head.
+    ``boundary=0`` is plain causal attention; ``causal=False`` is dense
+    cross attention.
+  * ``score(qbar, k, valid, backend=)`` — Algorithm 1's fused scoring pass
+    (normalise K -> Q̄Kᵀ -> max over queries -> validity mask).
+
+Dispatch contract
+-----------------
+``backend`` is one of:
+
+  "xla"              pure-jnp reference (kernels/ref.py) — fast on CPU,
+                     compiles anywhere, the parity oracle.
+  "pallas_interpret" the Pallas kernels run under ``interpret=True`` —
+                     slow, exercises the exact kernel code path on any
+                     backend (used by the parity/allclose suites).
+  "pallas"           compiled Pallas TPU kernels.
+  "auto" / None      resolve via `resolve_backend`.
+
+``resolve_backend(backend, cfg)`` picks, in priority order:
+  1. an explicit non-"auto" ``backend`` argument,
+  2. the ``REPRO_BACKEND`` environment variable (global override),
+  3. ``QuokaConfig.backend`` when not "auto",
+  4. hardware auto-detection: "pallas" on TPU, else "xla".
+
+All backends produce outputs equal within tolerance (enforced by
+tests/test_backend_parity.py); layout conversion BTHD <-> BHTD happens here.
 """
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 import jax
@@ -18,23 +48,44 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_bhtd
 from repro.kernels.quoka_score import quoka_score_bhtd
 
+BACKENDS = ("xla", "pallas_interpret", "pallas")
+_ENV_VAR = "REPRO_BACKEND"
+
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _resolve(backend: str) -> str:
-    if backend == "auto":
-        return "pallas" if _on_tpu() else "xla"
-    return backend
+def resolve_backend(backend: Optional[str] = None, cfg=None) -> str:
+    """Resolve a backend name per the module-docstring priority order.
+
+    ``cfg`` is a ``QuokaConfig`` (or anything with a ``backend`` attribute);
+    the result is always a concrete member of ``BACKENDS``.
+    """
+    be = backend or "auto"
+    if be == "auto":
+        be = os.environ.get(_ENV_VAR, "auto")
+    if be == "auto" and cfg is not None:
+        be = getattr(cfg, "backend", "auto") or "auto"
+    if be == "auto":
+        be = "pallas" if _on_tpu() else "xla"
+    if be not in BACKENDS:
+        raise ValueError(f"unknown kernel backend {be!r}; "
+                         f"expected one of {BACKENDS + ('auto',)}")
+    return be
 
 
-def flash_attention(q, k, v, k_valid=None, *, causal: bool = True,
-                    boundary: int = 0, scale: Optional[float] = None,
-                    backend: str = "auto"):
-    """q: (b, tq, h, d); k, v: (b, tk, h_kv, d); k_valid: (b, tk) bool.
-    Returns (b, tq, h, d)."""
-    be = _resolve(backend)
+def attention(q, k, v, k_valid=None, *, causal: bool = True,
+              boundary: int = 0, scale: Optional[float] = None,
+              backend: Optional[str] = None, cfg=None):
+    """Post-selection attention over a [selected budget | chunk] key layout.
+
+    q: (b, tq, h, d); k, v: (b, tk, h_kv, d);
+    k_valid: bool (b, tk) or (b, h_kv, tk) — False keys never attended.
+    ``boundary`` (static) marks the selected-prefix length.
+    Returns (b, tq, h, d).
+    """
+    be = resolve_backend(backend, cfg)
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
@@ -49,13 +100,33 @@ def flash_attention(q, k, v, k_valid=None, *, causal: bool = True,
     return out.transpose(0, 2, 1, 3)
 
 
-def quoka_score(qbar, k, valid, *, backend: str = "auto"):
-    """qbar: (b, n_q, n_kv, d) normalised pre-aggregated queries (BTHD-ish);
+def score(qbar, k, valid, *, backend: Optional[str] = None, cfg=None):
+    """Fused QUOKA scoring (Algorithm 1 lines 7-10): cosine scores of
+    pre-aggregated queries against normalised keys, max over the query axis.
+
+    qbar: (b, n_q, n_kv, d) pre-aggregated NORMALISED queries (BTHD-ish);
     k: (b, t, n_kv, d) raw keys; valid: (b, t).
-    Returns fp32 scores (b, n_kv, t)."""
-    be = _resolve(backend)
+    Returns fp32 scores (b, n_kv, t) with NEG_INF on invalid slots.
+    """
+    be = resolve_backend(backend, cfg)
     qt = qbar.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     if be == "xla":
         return ref.quoka_score_ref(qt, kt, valid)
     return quoka_score_bhtd(qt, kt, valid, interpret=(be != "pallas"))
+
+
+# ---------------------------------------------------------------------------
+# back-compat aliases (pre-facade names; "auto" keeps the old TPU-detection
+# behaviour because resolve_backend falls through to hardware detection)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, k_valid=None, *, causal: bool = True,
+                    boundary: int = 0, scale: Optional[float] = None,
+                    backend: str = "auto"):
+    return attention(q, k, v, k_valid, causal=causal, boundary=boundary,
+                     scale=scale, backend=backend)
+
+
+def quoka_score(qbar, k, valid, *, backend: str = "auto"):
+    return score(qbar, k, valid, backend=backend)

@@ -20,8 +20,12 @@ from jax.experimental import pallas as pl
 
 try:
     from jax.experimental.pallas import tpu as pltpu
+    # renamed TPUCompilerParams -> CompilerParams across jax releases
+    _COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or \
+        getattr(pltpu, "TPUCompilerParams", None)
 except Exception:  # pragma: no cover
     pltpu = None
+    _COMPILER_PARAMS = None
 
 NEG_INF = -1e30
 
@@ -63,8 +67,8 @@ def quoka_score_bhtd(qbar, k, valid, *, block_t: int = 512,
     grid = (b, n_kv, t_p // block_t)
 
     kwargs = {}
-    if not interpret and pltpu is not None:  # pragma: no cover
-        kwargs["compiler_params"] = pltpu.CompilerParams(
+    if not interpret and _COMPILER_PARAMS is not None:  # pragma: no cover
+        kwargs["compiler_params"] = _COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "parallel"))
     out = pl.pallas_call(
         _kernel,

@@ -20,9 +20,10 @@ def flash_attention_ref(q, k, v, *, causal: bool = True,
     """Oracle for the flash kernel.
 
     q: (b, h, tq, d); k, v: (b, h_kv, tk, d) with h % h_kv == 0.
+    k_valid: bool (b, tk) shared across heads, or (b, h_kv, tk) per KV head.
     Mask semantics (matching QUOKA's [selected | chunk] layout):
-      attend(i, j) iff (k_valid[b, j]) and (j < boundary  OR  not causal
-                                            OR  j - boundary <= i)
+      attend(i, j) iff (k_valid[b(, h_kv), j]) and (j < boundary  OR
+                        not causal  OR  j - boundary <= i)
     i.e. the first `boundary` keys are an unconditioned prefix (the selected
     budget), the remainder is causal w.r.t. the chunk-local index.
     """
@@ -41,7 +42,11 @@ def flash_attention_ref(q, k, v, *, causal: bool = True,
         m = (j < boundary) | ((j - boundary) <= i)
     mask = m[None, None]
     if k_valid is not None:
-        mask = mask & k_valid[:, None, None, :]
+        if k_valid.ndim == 2:
+            kv_mask = k_valid[:, None, None, :]
+        else:                                   # (b, h_kv, tk) per KV head
+            kv_mask = jnp.repeat(k_valid, g, axis=1)[:, :, None, :]
+        mask = mask & kv_mask
     logits = jnp.where(mask, logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     # rows with every key masked produce uniform garbage; zero them like the

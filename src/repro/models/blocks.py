@@ -28,6 +28,7 @@ from repro.core import selection as sel_mod
 from repro.core.attention import (NEG_INF, attention_with_positions,
                                   dense_attention, position_mask)
 from repro.core.quoka import select_topk, subselect_queries, quoka_scores
+from repro.kernels import ops as kops
 from repro.models import mamba2, moe, rwkv6
 from repro.models.layers import (layernorm, layernorm_init, linear,
                                  linear_init, mlp, mlp_init, rmsnorm,
@@ -141,24 +142,35 @@ class AttnBlock:
         else:
             sel = sel_mod.select(method, q, kv.k, kv.v, kv.pos, start,
                                  ctx["qcfg"])
-            att = self._selected_attention(q, k, v, pos, sel)
+            att = self._selected_attention(q, k, v, pos, sel,
+                                           backend=ctx.get("backend"))
         x = x + linear(p["wo"], att.reshape(b, t, -1))
         x, aux = self._ffn(p, x, dict(ctx) if ctx else {})
         return x, cache._replace(kv=kv), aux
 
-    def _selected_attention(self, q, k_chunk, v_chunk, pos, sel):
-        """Dense attention over [selected budget | current chunk]."""
+    def _selected_attention(self, q, k_chunk, v_chunk, pos, sel,
+                            backend=None):
+        """Attention over [selected budget | current chunk] via the kernel
+        facade: the budget is an unconditioned prefix (`boundary`), budget
+        padding is masked through per-KV-head `k_valid` (sel.pos == -1).
+
+        Sliding-window layers keep the masked dense path — the window
+        constraint on selected keys is per-QUERY and cannot be expressed by
+        the kernel's static boundary + per-key validity contract.
+        """
         b, t = q.shape[:2]
         n_kv = k_chunk.shape[2]
         k_cat = jnp.concatenate([sel.k, k_chunk], axis=1)
         v_cat = jnp.concatenate([sel.v, v_chunk], axis=1)
-        # mask: selected keys are all strictly before the chunk (causal by
-        # construction); enforce validity + optional window per query
+        if self.window is None:
+            k_valid = jnp.concatenate(
+                [sel.pos >= 0, jnp.ones((b, n_kv, t), bool)], axis=-1)
+            return kops.attention(q, k_cat, v_cat, k_valid, causal=True,
+                                  boundary=sel.pos.shape[-1],
+                                  backend=backend, cfg=self.cfg.quoka)
         qp = pos[:, None, :, None]                       # (b,1,t,1)
         sp = sel.pos[:, :, None, :]                      # (b,n_kv,1,B)
-        m_sel = sp >= 0
-        if self.window is not None:
-            m_sel = m_sel & (sp > qp - self.window)
+        m_sel = (sp >= 0) & (sp > qp - self.window)
         m_sel = jnp.broadcast_to(m_sel, (b, n_kv, t, sel.pos.shape[-1]))
         tri = jnp.tril(jnp.ones((t, t), bool))
         m_chunk = jnp.broadcast_to(tri[None, None], (b, n_kv, t, t))
@@ -313,7 +325,13 @@ class MLABlock:
                             pos, lat: LatentCache, start, ctx):
         """QUOKA (or baseline) on the COMPRESSED latent: one shared 'KV head'
         per token — scoring queries are the absorbed per-head queries, so
-        pre-aggregation averages over all n_heads (n_kv == 1)."""
+        pre-aggregation averages over all n_heads (n_kv == 1).
+
+        The post-selection attention runs through the kernel facade in
+        latent space: queries/keys are the concatenated [absorbed | rope]
+        vectors, values are the latent ckv zero-padded to the key width
+        (a zero value-tail does not change the softmax; the padded output
+        columns are sliced off before the W_uv decompression)."""
         b, t = q_abs.shape[:2]
         qc = ctx["qcfg"]
         latent_keys = jnp.concatenate([lat.ckv, lat.krope],
@@ -325,13 +343,17 @@ class MLABlock:
         ckv_sel, kr_sel = sel.k[..., 0, :r], sel.k[..., 0, r:]   # (b,B,·)
         ckv_cat = jnp.concatenate([ckv_sel, ckv_chunk], axis=1)
         kr_cat = jnp.concatenate([kr_sel, kr_chunk], axis=1)
-        m_sel = (sel.pos[:, :, None, :] >= 0)                    # (b,1,1,B)
-        m_sel = jnp.broadcast_to(m_sel, (b, 1, t, sel.pos.shape[-1]))
-        tri = jnp.broadcast_to(jnp.tril(jnp.ones((t, t), bool))[None, None],
-                               (b, 1, t, t))
-        mask = jnp.concatenate([m_sel, tri], axis=-1)
-        return self._absorbed_attention(p, q_abs, q_rope, ckv_cat, kr_cat,
-                                        mask)
+        k_cat = jnp.concatenate([ckv_cat, kr_cat], axis=-1)[:, :, None, :]
+        rd = k_cat.shape[-1] - r
+        v_pad = jnp.pad(ckv_cat, ((0, 0), (0, 0), (0, rd)))[:, :, None, :]
+        k_valid = jnp.concatenate(
+            [sel.pos >= 0, jnp.ones((b, 1, t), bool)], axis=-1)
+        o_lat = kops.attention(q_score, k_cat, v_pad, k_valid, causal=True,
+                               boundary=sel.pos.shape[-1], scale=self.scale,
+                               backend=ctx.get("backend"), cfg=qc)[..., :r]
+        out = jnp.einsum("bthr,rhv->bthv", o_lat.astype(jnp.float32),
+                         p["wv_b"].astype(jnp.float32))
+        return out.reshape(b, t, -1).astype(q_abs.dtype)
 
 
 # ============================================================================
@@ -501,7 +523,8 @@ class DecCrossBlock:
         else:
             s = sel_mod.select(method, q, kv.k, kv.v, kv.pos, start,
                                ctx["qcfg"])
-            att = a._selected_attention(q, k, v, pos, s)
+            att = a._selected_attention(q, k, v, pos, s,
+                                        backend=ctx.get("backend"))
         return x + linear(sp["wo"], att.reshape(b, t, -1)), kv
 
     def apply(self, p, x, pos, cache: BlockCache, ctx):

@@ -106,8 +106,19 @@ class Model:
         x, _ = self.enc_stack.train(p["enc"]["stack"], x, pos, {})
         return rmsnorm(p["enc"]["ln"], x, cfg.norm_eps)
 
-    def _ctx(self, p, method: str, enc_out=None) -> Dict:
-        ctx = {"method": method, "qcfg": self.cfg.quoka}
+    def _ctx(self, p, method: str, enc_out=None,
+             backend: Optional[str] = None) -> Dict:
+        import dataclasses
+
+        from repro.kernels import ops as kops
+        # kernel backend resolved ONCE at trace time (env/config/hardware)
+        # and baked into the qcfg handed to every layer, so the scoring
+        # stage (sel_mod.select -> quoka_scores) dispatches consistently
+        # with the attention stage
+        be = kops.resolve_backend(backend, self.cfg.quoka)
+        ctx = {"method": method,
+               "qcfg": dataclasses.replace(self.cfg.quoka, backend=be),
+               "backend": be}
         if self.has_shared:
             ctx["shared"] = p["shared"]
         if enc_out is not None:
@@ -211,7 +222,8 @@ class Model:
                               enc_done=jnp.ones((), bool))
 
     def prefill(self, p, batch: Dict, cache: ModelCache,
-                method: Optional[str] = None
+                method: Optional[str] = None,
+                backend: Optional[str] = None
                 ) -> Tuple[jax.Array, ModelCache]:
         """Chunked prefill of the full prompt.  Returns (last-position
         logits (b, V), filled cache)."""
@@ -227,7 +239,7 @@ class Model:
         nc = t // bcp
         xs = x_all.reshape(b, nc, bcp, d).swapaxes(0, 1)
         ps = pos_all.reshape(b, nc, bcp).swapaxes(0, 1)
-        ctx = self._ctx(p, method)
+        ctx = self._ctx(p, method, backend=backend)
 
         def body(carry, inp):
             cch, _ = carry
@@ -240,7 +252,8 @@ class Model:
         return self._readout(p, last_h[:, None, :])[:, 0], cache
 
     def prefill_chunk(self, p, batch: Dict, pos_start, cache: ModelCache,
-                      method: Optional[str] = None
+                      method: Optional[str] = None,
+                      backend: Optional[str] = None
                       ) -> Tuple[jax.Array, ModelCache]:
         """One B_CP chunk through all stacks — the steady-state unit of
         chunked prefill for per-chunk dispatch (continuous batching / the
@@ -262,12 +275,13 @@ class Model:
             x = x + sinusoidal(pos, cfg.d_model, dt)
         from repro.sharding import ctx as shctx
         x = shctx.shard_activation(x)
-        ctx = self._ctx(p, method)
+        ctx = self._ctx(p, method, backend=backend)
         x, cache, _ = self._apply_stacks(p, x, pos, cache, ctx)
         return x[:, -1, :], cache
 
     def decode_step(self, p, tokens, pos, cache: ModelCache,
-                    method: Optional[str] = None
+                    method: Optional[str] = None,
+                    backend: Optional[str] = None
                     ) -> Tuple[jax.Array, ModelCache]:
         """One decode step.  tokens: (b,) int32; pos: scalar or (b,).
         Returns (logits (b, V), cache)."""
@@ -280,7 +294,7 @@ class Model:
                                 (b, 1))
         if not cfg.use_rope:
             x = x + sinusoidal(pos2, cfg.d_model, dt)
-        ctx = self._ctx(p, method)
+        ctx = self._ctx(p, method, backend=backend)
         x, cache, _ = self._apply_stacks(p, x, pos2, cache, ctx)
         return self._readout(p, x)[:, 0], cache
 

@@ -25,21 +25,30 @@ class GenerationResult:
     decode_tps: float             # decoded tokens/sec across the batch
     prompt_len: int
     method: str
+    backend: str = "auto"         # resolved kernel backend of this run
 
 
 class Engine:
     def __init__(self, model: Model, params, *, method: Optional[str] = None,
+                 backend: Optional[str] = None,
                  sampler: SamplerConfig = SamplerConfig()):
+        """``backend`` overrides the kernel backend for this engine
+        ("xla" | "pallas_interpret" | "pallas"); None defers to the env /
+        ``QuokaConfig.backend`` / hardware resolution (kernels/ops.py)."""
+        from repro.kernels import ops as kops
         self.model = model
         self.params = params
         self.method = method or model.cfg.quoka.method
+        self.backend = kops.resolve_backend(backend, model.cfg.quoka)
         self.sampler = sampler
         self._prefill = jax.jit(
             lambda p, batch, cache: model.prefill(p, batch, cache,
-                                                  self.method))
+                                                  self.method,
+                                                  backend=self.backend))
         self._decode = jax.jit(
             lambda p, tok, pos, cache: model.decode_step(p, tok, pos, cache,
-                                                         self.method))
+                                                         self.method,
+                                                         backend=self.backend))
 
     def pad_prompt(self, tokens: np.ndarray) -> np.ndarray:
         """Left-pad to a chunk multiple (pad tokens become ordinary context;
@@ -85,4 +94,4 @@ class Engine:
         tps = (b * (max_new - 1)) / dt if max_new > 1 and dt > 0 else 0.0
         return GenerationResult(tokens=np.stack(out, axis=1), ttft_s=ttft,
                                 decode_tps=tps, prompt_len=t,
-                                method=self.method)
+                                method=self.method, backend=self.backend)

@@ -20,6 +20,10 @@ from repro.training import optimizer as opt
 
 KEY = jax.random.PRNGKey(0)
 
+# minutes-long trained-model accuracy proxy (paper §4.1) — excluded from
+# the fast CI tier
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def retrieval_model():

@@ -1,6 +1,8 @@
 """Optimizer / schedule / checkpoint correctness."""
 import os
 
+import pytest
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -73,6 +75,7 @@ def test_weight_decay_only_on_matrices():
     assert float(p2["g"][0]) == 1.0         # not decayed
 
 
+@pytest.mark.slow
 def test_training_reduces_loss_on_retrieval_data():
     from repro.data.synthetic import needle_batches
     cfg = get_config("granite-3-2b").smoke(n_layers=2, d_model=128,
