@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
   ablations        Tables 9-12      scoring / aggregation / B_CP / N_Q
   complexity       Table 4          analytic + measured scoring complexity
   roofline_table   EXPERIMENTS §Roofline (from dry-run artifacts)
+  serving_throughput  §4.6 under load: continuous batching vs one-at-a-time
 """
 import argparse
 import sys
@@ -26,7 +27,7 @@ def main() -> None:
 
     from benchmarks import (ablations, accuracy_proxy, attn_latency,
                             complexity, decode_latency, niah, roofline_table,
-                            ttft)
+                            serving_throughput, ttft)
     todo = {
         "attn_latency": attn_latency.run,
         "ttft": ttft.run,
@@ -36,6 +37,7 @@ def main() -> None:
         "complexity": complexity.run,
         "niah": niah.run,
         "roofline_table": roofline_table.run,
+        "serving_throughput": serving_throughput.run,
     }
     if args.fast:
         todo.pop("niah")

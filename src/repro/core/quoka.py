@@ -183,16 +183,28 @@ def select_topk(scores: jax.Array, k: jax.Array, v: jax.Array,
                     pos=pos, idx=jnp.where(good, top_i, -1))
 
 
+def prior_context_valid(key_pos: jax.Array, chunk_start) -> jax.Array:
+    """Selectable slots: 0 <= pos < chunk_start (the prior context, eq. (2)).
+
+    ``chunk_start`` may be a traced scalar (scan carry) or a per-row ``(b,)``
+    vector (continuous batching: requests in one step batch sit at different
+    positions)."""
+    cs = jnp.asarray(chunk_start, jnp.int32)
+    if cs.ndim == 1:
+        cs = cs[:, None]
+    return (key_pos >= 0) & (key_pos < cs)
+
+
 def quoka_select(q: jax.Array, k: jax.Array, v: jax.Array,
                  key_pos: jax.Array, chunk_start, cfg: QuokaConfig,
                  budget: Optional[int] = None) -> Selected:
     """Full Algorithm 1: subselect queries, score, topk-gather.
 
-    ``chunk_start`` may be traced (scan carry); selection considers only
-    slots with 0 <= pos < chunk_start (the prior context, eq. (2)).
+    ``chunk_start`` may be traced (scan carry) and scalar or per-row;
+    selection considers only prior-context slots (eq. (2)).
     """
     qs = subselect_queries(q, cfg.n_queries, n_kv=k.shape[2])
-    valid = (key_pos >= 0) & (key_pos < chunk_start)
+    valid = prior_context_valid(key_pos, chunk_start)
     scores = quoka_scores(qs, k, valid, cfg)
     return select_topk(scores, k, v, key_pos, budget or cfg.budget,
                        keep_first=cfg.keep_first)

@@ -31,7 +31,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import QuokaConfig
 from repro.core.attention import NEG_INF
-from repro.core.quoka import Selected, quoka_select, select_topk, quoka_scores, subselect_queries
+from repro.core.quoka import (Selected, prior_context_valid, quoka_select,
+                              select_topk, quoka_scores, subselect_queries)
 from repro.models.layers import l2_normalize
 
 METHODS = ("quoka", "sample_attention", "sparq", "loki", "less_is_more",
@@ -181,7 +182,7 @@ def select(method: str, q, k, v, key_pos, chunk_start, cfg: QuokaConfig,
     budget = budget or resolve_budget(cfg, k.shape[1])
     if method == "quoka":
         return quoka_select(q, k, v, key_pos, chunk_start, cfg, budget)
-    valid = (key_pos >= 0) & (key_pos < chunk_start)
+    valid = prior_context_valid(key_pos, chunk_start)
     scores = compute_scores(method, q, k, valid, cfg)
     return select_topk(scores, k, v, key_pos, budget,
                        keep_first=cfg.keep_first)

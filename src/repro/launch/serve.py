@@ -1,11 +1,18 @@
 """Serving launcher: batched chunked-prefill + decode with QUOKA selection.
 
+One-shot batch mode (TTFT / decode throughput, paper §4.6):
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
         --prompt-len 1024 --max-new 32 --method quoka
 
+Continuous-batching trace mode (paged KV pool + chunked-prefill/decode
+scheduler; Poisson arrivals):
+
+    PYTHONPATH=src python -m repro.launch.serve --smoke --continuous \
+        --n-requests 16 --rate 8 --max-decode-batch 8
+
 Loads a checkpoint if given (random init otherwise — latency numbers are
-weight-independent), pads/batches the prompts, and reports TTFT and decode
-throughput for the chosen selection method vs dense.
+weight-independent) and reports TTFT / throughput / batch occupancy.
 """
 from __future__ import annotations
 
@@ -20,8 +27,41 @@ from repro.configs import get_config
 from repro.core.selection import METHODS
 from repro.models.model import build_model
 from repro.serving.engine import Engine
+from repro.serving.request import make_requests
 from repro.serving.sampler import SamplerConfig
 from repro.training import checkpoint as ckpt
+
+
+def run_continuous(model, params, args):
+    """Trace-driven continuous batching: Poisson arrivals at --rate req/s,
+    prompt lengths uniform in [prompt_len/2, prompt_len]."""
+    rng = np.random.default_rng(0)
+    lens = rng.integers(max(1, args.prompt_len // 2), args.prompt_len + 1,
+                        args.n_requests)
+    prompts = [rng.integers(3, model.cfg.vocab, (int(n),)).astype(np.int32)
+               for n in lens]
+    arrivals = (np.zeros(args.n_requests) if np.isinf(args.rate)
+                else np.cumsum(rng.exponential(1.0 / args.rate,
+                                               args.n_requests)))
+    eng = Engine(model, params, method=args.method,
+                 sampler=SamplerConfig(temperature=args.temperature))
+    kw = dict(block_size=args.block_size, num_blocks=args.num_blocks,
+              max_prefill_tokens=args.max_prefill_tokens,
+              max_decode_batch=args.max_decode_batch)
+    # compile warmup with the REAL step geometry: the jit cache is keyed on
+    # max_nb/num_blocks, which derive from the longest prompt and max_new
+    longest = max(prompts, key=len)
+    eng.serve(make_requests([longest] * 2, args.max_new), **kw)
+    res = eng.serve(make_requests(prompts, args.max_new, arrivals=arrivals),
+                    **kw)
+    ttft = np.asarray(sorted(res.ttft_s.values()))
+    print(f"{args.method:10s} {res.generated} tokens / {res.wall_s:.2f} s "
+          f"= {res.tokens_per_s:8.1f} tok/s   "
+          f"TTFT p50 {np.percentile(ttft, 50)*1e3:7.1f} ms   "
+          f"p99 {np.percentile(ttft, 99)*1e3:7.1f} ms   "
+          f"occupancy {res.occupancy:.2f}   "
+          f"steps {res.steps} ({res.prefill_steps} prefill / "
+          f"{res.decode_steps} decode)")
 
 
 def main():
@@ -38,6 +78,21 @@ def main():
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--compare-dense", action="store_true")
+    # continuous-batching trace mode
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve a Poisson trace with the paged-pool "
+                         "scheduler instead of one synchronous batch")
+    ap.add_argument("--n-requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=float("inf"),
+                    help="Poisson arrival rate, requests/s (inf = all at 0)")
+    ap.add_argument("--block-size", type=int, default=None,
+                    help="KV pool block size (default: chunk_size)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="KV pool size (default: fits max-decode-batch)")
+    ap.add_argument("--max-prefill-tokens", type=int, default=None,
+                    help="prompt tokens packed per engine step "
+                         "(default: 4 * chunk_size)")
+    ap.add_argument("--max-decode-batch", type=int, default=8)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -55,6 +110,10 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     if args.ckpt:
         params = ckpt.restore(args.ckpt, params)
+
+    if args.continuous:
+        run_continuous(model, params, args)
+        return
 
     rng = np.random.default_rng(0)
     toks = jnp.asarray(rng.integers(3, cfg.vocab,

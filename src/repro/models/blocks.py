@@ -9,11 +9,15 @@ Every block implements the same protocol so the scanned stack
     apply(p, x, pos, cache, ctx)       -> (x, cache, aux)   # prefill chunk
                                                             # or decode (t=1)
 
-``ctx`` (dict, static contents):
+``ctx`` (dict):
     method   selection method name ("full" = dense attention)
     qcfg     QuokaConfig
     enc_out  whisper encoder output (b, n_ctx, d) — train/cache-build only
     shared   params of the zamba2 shared attention block
+    slot     cache write slot of the chunk (traced scalar, or per-row (b,)
+             under continuous batching).  Distinct from ``pos``: pad slots
+             carry pos == -1 while still occupying a cache slot.  Absent ->
+             derived as pos[0, 0] (the legacy unpadded path).
 """
 from __future__ import annotations
 
@@ -37,6 +41,14 @@ from repro.serving.cache import (BlockCache, CrossKV, KVCache, LatentCache,
                                  kv_init, kv_write, kv_write_ring,
                                  latent_init, latent_write)
 from repro.sharding import ctx as shctx
+
+
+def _chunk_slot(ctx, pos):
+    """Cache write slot for the current chunk: explicit ``ctx["slot"]`` when
+    provided (padded prompts / continuous batching), else the first query
+    position (slot == position on the legacy unpadded path)."""
+    slot = ctx.get("slot") if isinstance(ctx, dict) else None
+    return pos[0, 0] if slot is None else slot
 
 
 def _norm_fns(cfg: ModelConfig):
@@ -128,10 +140,10 @@ class AttnBlock:
             return y, cache, aux
         b, t, _ = x.shape
         q, k, v = self._qkv(p, self.norm(p["ln1"], x), pos)
-        start = pos[0, 0]
+        start = _chunk_slot(ctx, pos)
         kv = cache.kv
         write = kv_write_ring if self.window is not None else kv_write
-        kv = write(kv, k, v, start)
+        kv = write(kv, k, v, start, pos_new=pos)
 
         method = ctx.get("method", "full")
         budget = sel_mod.resolve_budget(ctx["qcfg"], kv.capacity) \
@@ -162,9 +174,10 @@ class AttnBlock:
         n_kv = k_chunk.shape[2]
         k_cat = jnp.concatenate([sel.k, k_chunk], axis=1)
         v_cat = jnp.concatenate([sel.v, v_chunk], axis=1)
+        # chunk keys with pos == -1 are pad slots — never attendable
+        chunk_valid = jnp.broadcast_to((pos >= 0)[:, None, :], (b, n_kv, t))
         if self.window is None:
-            k_valid = jnp.concatenate(
-                [sel.pos >= 0, jnp.ones((b, n_kv, t), bool)], axis=-1)
+            k_valid = jnp.concatenate([sel.pos >= 0, chunk_valid], axis=-1)
             return kops.attention(q, k_cat, v_cat, k_valid, causal=True,
                                   boundary=sel.pos.shape[-1],
                                   backend=backend, cfg=self.cfg.quoka)
@@ -173,7 +186,8 @@ class AttnBlock:
         m_sel = (sp >= 0) & (sp > qp - self.window)
         m_sel = jnp.broadcast_to(m_sel, (b, n_kv, t, sel.pos.shape[-1]))
         tri = jnp.tril(jnp.ones((t, t), bool))
-        m_chunk = jnp.broadcast_to(tri[None, None], (b, n_kv, t, t))
+        m_chunk = tri[None, None] & chunk_valid[:, :, None, :]
+        m_chunk = jnp.broadcast_to(m_chunk, (b, n_kv, t, t))
         mask = jnp.concatenate([m_sel, m_chunk], axis=-1)
         return dense_attention(q, k_cat, v_cat, mask)
 
@@ -305,8 +319,8 @@ class MLABlock:
         h = self.norm(p["ln1"], x)
         q_abs, q_rope = self._queries(p, h, pos)
         ckv, kr = self._latent_kv(p, h, pos)
-        start = pos[0, 0]
-        lat = latent_write(cache.latent, ckv, kr, start)
+        start = _chunk_slot(ctx, pos)
+        lat = latent_write(cache.latent, ckv, kr, start, pos_new=pos)
 
         method = ctx.get("method", "full")
         budget = sel_mod.resolve_budget(ctx["qcfg"], lat.capacity) \
@@ -347,7 +361,7 @@ class MLABlock:
         rd = k_cat.shape[-1] - r
         v_pad = jnp.pad(ckv_cat, ((0, 0), (0, 0), (0, rd)))[:, :, None, :]
         k_valid = jnp.concatenate(
-            [sel.pos >= 0, jnp.ones((b, 1, t), bool)], axis=-1)
+            [sel.pos >= 0, (pos >= 0)[:, None, :]], axis=-1)
         o_lat = kops.attention(q_score, k_cat, v_pad, k_valid, causal=True,
                                boundary=sel.pos.shape[-1], scale=self.scale,
                                backend=ctx.get("backend"), cfg=qc)[..., :r]
@@ -512,8 +526,8 @@ class DecCrossBlock:
         if train:
             att = attention_with_positions(q, k, v, pos, pos, causal=True)
             return x + linear(sp["wo"], att.reshape(b, t, -1)), None
-        start = pos[0, 0]
-        kv = kv_write(cache, k, v, start)
+        start = _chunk_slot(ctx, pos)
+        kv = kv_write(cache, k, v, start, pos_new=pos)
         method = ctx.get("method", "full")
         budget = sel_mod.resolve_budget(ctx["qcfg"], kv.capacity) \
             if method != "full" else 0

@@ -79,18 +79,31 @@ class Model:
     # input embedding (modality frontends are stubs — see module docstring)
     # ------------------------------------------------------------------
     def embed_inputs(self, p, batch: Dict) -> Tuple[jax.Array, jax.Array]:
-        """Returns (x (b, T, d), pos (b, T))."""
+        """Returns (x (b, T, d), pos (b, T)).
+
+        ``batch["pad"]`` (b,) optionally gives per-row LEFT-pad counts: pad
+        slots get ``pos = -1`` (invalid), masking them out of attention, KV
+        selection scoring and the cache — pad tokens are NOT ordinary
+        context.  (Recurrent blocks still see pad embeddings sequentially;
+        exact pad masking holds for attention-cache architectures.)"""
         cfg = self.cfg
         dt = cfg.compute_dtype
         tok = batch["tokens"]
         x = embed(p["embed"], tok, dt)
         if self.is_vlm:
+            if batch.get("pad") is not None:
+                raise ValueError("left-padding unsupported for VLM inputs")
             pe = batch["patches"].astype(dt)              # (b, n_patch, d_in)
             h = jax.nn.gelu(linear(p["proj"]["fc1"], pe))
             h = linear(p["proj"]["fc2"], h)
             x = jnp.concatenate([h, x], axis=1)
         b, t = x.shape[:2]
         pos = jnp.arange(t, dtype=jnp.int32)[None].repeat(b, 0)
+        pad = batch.get("pad")
+        if pad is not None:
+            pad = jnp.asarray(pad, jnp.int32)
+            pos = jnp.where(jnp.arange(t, dtype=jnp.int32)[None] < pad[:, None],
+                            -1, pos)
         if not cfg.use_rope:
             x = x + sinusoidal(pos, cfg.d_model, dt)
         from repro.sharding import ctx as shctx
@@ -239,62 +252,83 @@ class Model:
         nc = t // bcp
         xs = x_all.reshape(b, nc, bcp, d).swapaxes(0, 1)
         ps = pos_all.reshape(b, nc, bcp).swapaxes(0, 1)
+        # write SLOT of each chunk — distinct from pos: pad slots carry
+        # pos == -1 but still occupy their cache slot
+        slots = jnp.arange(nc, dtype=jnp.int32) * bcp
         ctx = self._ctx(p, method, backend=backend)
 
         def body(carry, inp):
             cch, _ = carry
-            xc, pc = inp
-            h, cch, _aux = self._apply_stacks(p, xc, pc, cch, ctx)
+            xc, pc, sl = inp
+            h, cch, _aux = self._apply_stacks(p, xc, pc, cch,
+                                              dict(ctx, slot=sl))
             return (cch, h[:, -1, :]), None
 
         (cache, last_h), _ = jax.lax.scan(
-            body, (cache, jnp.zeros((b, d), cfg.compute_dtype)), (xs, ps))
+            body, (cache, jnp.zeros((b, d), cfg.compute_dtype)),
+            (xs, ps, slots))
         return self._readout(p, last_h[:, None, :])[:, 0], cache
 
     def prefill_chunk(self, p, batch: Dict, pos_start, cache: ModelCache,
                       method: Optional[str] = None,
-                      backend: Optional[str] = None
-                      ) -> Tuple[jax.Array, ModelCache]:
+                      backend: Optional[str] = None,
+                      valid_len=None) -> Tuple[jax.Array, ModelCache]:
         """One B_CP chunk through all stacks — the steady-state unit of
         chunked prefill for per-chunk dispatch (continuous batching / the
         production serving path; §Perf: carrying caches through a scan over
         chunks shuttles every layer's full cache per chunk, while per-chunk
         dispatch with a DONATED cache updates 128 rows in place).
 
-        batch["tokens"]: (b, B_CP) chunk; pos_start: traced scalar.
-        Returns (last hidden (b, d), cache)."""
+        batch["tokens"]: (b, B_CP) chunk; pos_start: traced scalar, or a
+        per-row (b,) vector under continuous batching (each request's chunk
+        starts at its own offset).  ``valid_len`` (b,) optionally marks how
+        many leading chunk tokens are real (tail chunks of a ragged batch;
+        the rest get pos = -1 and are masked everywhere).
+        Returns (last VALID hidden (b, d), cache)."""
         cfg = self.cfg
         method = method or cfg.quoka.method
         tok = batch["tokens"]
         b, t = tok.shape
         dt = cfg.compute_dtype
         x = embed(p["embed"], tok, dt)
-        pos = (jnp.asarray(pos_start, jnp.int32)
-               + jnp.arange(t, dtype=jnp.int32))[None].repeat(b, 0)
+        s = jnp.asarray(pos_start, jnp.int32)
+        offs = jnp.arange(t, dtype=jnp.int32)
+        pos = (s + offs)[None].repeat(b, 0) if s.ndim == 0 \
+            else s[:, None] + offs[None]
+        if valid_len is not None:
+            vl = jnp.asarray(valid_len, jnp.int32)
+            pos = jnp.where(offs[None] < vl[:, None], pos, -1)
         if not cfg.use_rope:
             x = x + sinusoidal(pos, cfg.d_model, dt)
         from repro.sharding import ctx as shctx
         x = shctx.shard_activation(x)
         ctx = self._ctx(p, method, backend=backend)
+        ctx["slot"] = s
         x, cache, _ = self._apply_stacks(p, x, pos, cache, ctx)
-        return x[:, -1, :], cache
+        if valid_len is None:
+            return x[:, -1, :], cache
+        li = jnp.clip(vl - 1, 0, t - 1)
+        last = jnp.take_along_axis(x, li[:, None, None], axis=1)[:, 0, :]
+        return last, cache
 
     def decode_step(self, p, tokens, pos, cache: ModelCache,
                     method: Optional[str] = None,
                     backend: Optional[str] = None
                     ) -> Tuple[jax.Array, ModelCache]:
-        """One decode step.  tokens: (b,) int32; pos: scalar or (b,).
+        """One decode step.  tokens: (b,) int32; pos: scalar or (b,)
+        (per-request positions under continuous batching).
         Returns (logits (b, V), cache)."""
         cfg = self.cfg
         method = method or cfg.quoka.method
         dt = cfg.compute_dtype
         b = tokens.shape[0]
         x = embed(p["embed"], tokens[:, None], dt)
-        pos2 = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1, 1),
-                                (b, 1))
+        ps = jnp.asarray(pos, jnp.int32)
+        pos2 = jnp.broadcast_to(ps.reshape(-1, 1), (b, 1))
         if not cfg.use_rope:
             x = x + sinusoidal(pos2, cfg.d_model, dt)
         ctx = self._ctx(p, method, backend=backend)
+        ctx["slot"] = ps
         x, cache, _ = self._apply_stacks(p, x, pos2, cache, ctx)
         return self._readout(p, x)[:, 0], cache
 

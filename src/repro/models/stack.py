@@ -82,7 +82,8 @@ class Stack:
         place, so this path books only the written rows.
         """
         t = x.shape[1]
-        start = pos[0, 0]
+        slot = ctx.get("slot")
+        start = pos[0, 0] if slot is None else slot
 
         def write_back(blk, buf_tree, new_slice, idx):
             """Windowed write of one layer's cache updates into the stacked
@@ -103,6 +104,14 @@ class Stack:
                     # Batched decode caches shard over BATCH instead — the
                     # windowed write below stays collective-free there.
                     return buf.at[idx].set(new.astype(buf.dtype))
+                if s32.ndim == 1:
+                    # per-request write offsets (continuous batching): every
+                    # step-batch row writes its own [slot, slot + t) window
+                    rows = jax.vmap(lambda n, s: jax.lax.dynamic_slice_in_dim(
+                        n, s, t, axis=0))(new, s32)          # (b, t, ...)
+                    slots = s32[:, None] + jnp.arange(t, dtype=jnp.int32)
+                    bidx = jnp.arange(new.shape[0])[:, None]
+                    return buf.at[idx, bidx, slots].set(rows.astype(buf.dtype))
                 if ring:
                     cap = buf.shape[2]
                     slots = (s32 + jnp.arange(t, dtype=jnp.int32)) % cap

@@ -1,14 +1,25 @@
 """Serving engine: batched chunked prefill (QUOKA Algorithm 2) + decode.
 
-One jitted prefill (a lax.scan over B_CP chunks, selection per chunk per
-layer) and one jitted decode step (single-query selection).  The engine
-reports TTFT / decode throughput — the quantities of paper §4.6.
+Two serving modes share the model and kernel facade:
+
+  * ``generate`` — one synchronous batch: a jitted scan-prefill followed by
+    a Python decode loop (TTFT / decode-throughput probe, paper §4.6).
+    Tokens accumulate ON DEVICE; the single host sync happens after the
+    loop, so ``decode_tps`` measures compute, not transfers.
+  * ``step``/``serve`` — continuous batching: a paged KV pool
+    (serving/pool.py) plus a request-lifecycle scheduler
+    (serving/scheduler.py) drive two jitted step functions — a mixed
+    chunk-prefill step and a batched decode step — that gather each
+    request's blocks via its block table into a linear cache view, run the
+    existing model/kernel path, and scatter the touched blocks back.
+    Prefill chunks of new requests interleave with decode steps of running
+    ones (Sarathi-style), which is what chunked prefill exists for.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +37,46 @@ class GenerationResult:
     prompt_len: int
     method: str
     backend: str = "auto"         # resolved kernel backend of this run
+
+
+@dataclass
+class ServeState:
+    """Mutable state of one continuous-batching run (pool + scheduler +
+    compiled step functions + PRNG + counters)."""
+    pool: object
+    sched: object
+    fns: Tuple
+    key: object
+    chunk: int
+    max_nb: int
+    b_prefill: int
+    b_decode: int
+    t0: float = field(default_factory=time.perf_counter)
+    steps: int = 0
+    prefill_steps: int = 0
+    decode_steps: int = 0
+    occupancy: List[float] = field(default_factory=list)
+
+    @property
+    def now(self) -> float:
+        return time.perf_counter() - self.t0
+
+
+@dataclass
+class ServeResult:
+    """Outcome of one continuous-batching trace."""
+    tokens: Dict[int, np.ndarray]        # rid -> (n_generated,) int32
+    ttft_s: Dict[int, float]             # rid -> time to first token
+    latency_s: Dict[int, float]          # rid -> arrival -> completion
+    wall_s: float
+    generated: int                       # total tokens across requests
+    tokens_per_s: float                  # generated / wall_s
+    steps: int = 0
+    prefill_steps: int = 0
+    decode_steps: int = 0
+    occupancy: float = 0.0               # mean decode-batch fill [0, 1]
+    method: str = ""
+    backend: str = ""
 
 
 class Engine:
@@ -49,22 +100,34 @@ class Engine:
             lambda p, tok, pos, cache: model.decode_step(p, tok, pos, cache,
                                                          self.method,
                                                          backend=self.backend))
+        self._cont_fns: Dict = {}
 
-    def pad_prompt(self, tokens: np.ndarray) -> np.ndarray:
-        """Left-pad to a chunk multiple (pad tokens become ordinary context;
-        fine for the synthetic serving demos)."""
+    # ------------------------------------------------------------------
+    # one-shot batch mode
+    # ------------------------------------------------------------------
+    def pad_prompt(self, tokens: np.ndarray) -> Dict[str, np.ndarray]:
+        """Left-pad to a chunk multiple.  Returns a batch dict whose
+        ``pad`` entry carries the per-row pad count: inside the model, pad
+        slots get ``pos = -1`` and are masked out of attention AND KV
+        selection scoring — they are NOT ordinary context and cannot skew
+        QUOKA's mean-query/key statistics.  (Recurrent blocks still consume
+        pad embeddings sequentially; masking is exact for attention-cache
+        architectures.)"""
+        tokens = np.asarray(tokens)
         bcp = self.model.cfg.quoka.chunk_size
         t = tokens.shape[1]
         pad = (-t) % bcp
         if pad:
             tokens = np.concatenate(
                 [np.zeros((tokens.shape[0], pad), tokens.dtype), tokens], 1)
-        return tokens
+        return {"tokens": tokens,
+                "pad": np.full((tokens.shape[0],), pad, np.int32)}
 
     def generate(self, batch: Dict, max_new: int, *,
                  key=None) -> GenerationResult:
         """batch['tokens']: (b, T) prompt (T % chunk_size == 0; use
-        pad_prompt).  Extra modality inputs pass through."""
+        pad_prompt, whose 'pad' entry rides along).  Extra modality inputs
+        pass through."""
         model, params = self.model, self.params
         tokens = np.asarray(batch["tokens"])
         b, t = tokens.shape
@@ -79,19 +142,193 @@ class Engine:
         tok.block_until_ready()
         ttft = time.perf_counter() - t0
 
-        out = [np.asarray(tok)]
+        # device-side accumulation: one host transfer AFTER the loop.  A
+        # per-step np.asarray(tok) forces a device->host sync per token and
+        # poisons decode_tps with transfer latency.
+        out = [tok]
         t1 = time.perf_counter()
         pos = extra
         for i in range(max_new - 1):
             key = jax.random.fold_in(key, i)
             logits, cache = self._decode(params, tok, jnp.asarray(pos), cache)
             tok = sample(logits, key, self.sampler)
-            out.append(np.asarray(tok))
+            out.append(tok)
             pos += 1
         if max_new > 1:
             tok.block_until_ready()
         dt = time.perf_counter() - t1
         tps = (b * (max_new - 1)) / dt if max_new > 1 and dt > 0 else 0.0
-        return GenerationResult(tokens=np.stack(out, axis=1), ttft_s=ttft,
+        tokens_out = np.asarray(jnp.stack(out, axis=1))
+        return GenerationResult(tokens=tokens_out, ttft_s=ttft,
                                 decode_tps=tps, prompt_len=t,
                                 method=self.method, backend=self.backend)
+
+    # ------------------------------------------------------------------
+    # continuous batching
+    # ------------------------------------------------------------------
+    def _continuous_fns(self, block_size: int, max_nb: int, b_prefill: int,
+                        b_decode: int, num_blocks: int):
+        """Build (or fetch) the two jitted step functions for one static
+        geometry: gather blocks -> model step -> sample -> scatter back."""
+        sig = (block_size, max_nb, b_prefill, b_decode, num_blocks)
+        if sig in self._cont_fns:
+            return self._cont_fns[sig]
+        from repro.serving import pool as pl
+        model, method, backend = self.model, self.method, self.backend
+        chunk = model.cfg.quoka.chunk_size
+        sampler = self.sampler
+
+        def prefill_step(p, data, table, tokens, start, vlen, key):
+            cache = pl.gather(data, table, num_blocks, block_size)
+            last_h, cache = model.prefill_chunk(
+                p, {"tokens": tokens}, start, cache, method,
+                backend=backend, valid_len=vlen)
+            logits = model._readout(p, last_h[:, None, :])[:, 0]
+            tok = sample(logits, key, sampler)
+            wrote = jnp.where(vlen > 0, jnp.full_like(vlen, chunk), 0)
+            touched = pl.touched_blocks(start, wrote, max_nb, block_size)
+            data = pl.scatter(data, cache, table, touched,
+                              num_blocks, block_size)
+            return data, tok
+
+        def decode_step(p, data, table, tokens, pos, live, key):
+            cache = pl.gather(data, table, num_blocks, block_size)
+            logits, cache = model.decode_step(p, tokens, pos, cache,
+                                              method, backend=backend)
+            tok = sample(logits, key, sampler)
+            touched = pl.touched_blocks(pos, live, max_nb, block_size)
+            data = pl.scatter(data, cache, table, touched,
+                              num_blocks, block_size)
+            return data, tok
+
+        fns = (jax.jit(prefill_step), jax.jit(decode_step))
+        self._cont_fns[sig] = fns
+        return fns
+
+    def make_serve_state(self, requests: Sequence, *,
+                         block_size: Optional[int] = None,
+                         num_blocks: Optional[int] = None,
+                         max_prefill_tokens: Optional[int] = None,
+                         max_decode_batch: int = 8, key=None) -> ServeState:
+        """Size the pool/scheduler for a request trace and compile the two
+        step functions (static geometry: chunk width, prefill rows, decode
+        rows, blocks per request)."""
+        from repro.serving.pool import PagedKVCache, blocks_for_request
+        from repro.serving.scheduler import Scheduler
+        chunk = self.model.cfg.quoka.chunk_size
+        block_size = block_size or chunk
+        max_prefill_tokens = max_prefill_tokens or 4 * chunk
+        max_nb = max(blocks_for_request(r.prompt_len, r.max_new, chunk,
+                                        block_size) for r in requests)
+        if num_blocks is None:
+            num_blocks = max_decode_batch * max_nb    # no contention
+        b_p = max(1, max_prefill_tokens // chunk)
+        pool = PagedKVCache(self.model, num_blocks, block_size)
+        sched = Scheduler(pool, chunk, max_prefill_tokens, max_decode_batch)
+        fns = self._continuous_fns(block_size, max_nb, b_p,
+                                   max_decode_batch, num_blocks)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return ServeState(pool=pool, sched=sched, fns=fns, key=key,
+                          chunk=chunk, max_nb=max_nb, b_prefill=b_p,
+                          b_decode=max_decode_batch)
+
+    def step(self, state: ServeState) -> Tuple[int, int]:
+        """One engine step: admit, run a mixed chunk-prefill step over up to
+        ``max_prefill_tokens`` of pending prompt chunks, then a batched
+        decode step over every active decode request.  Returns
+        (prefill rows, decode rows) executed."""
+        pool, sched = state.pool, state.sched
+        sched.admit()
+
+        rows = sched.pack_prefill()
+        if rows:
+            tokens = np.zeros((state.b_prefill, state.chunk), np.int32)
+            start = np.zeros((state.b_prefill,), np.int32)
+            vlen = np.zeros((state.b_prefill,), np.int32)
+            for i, (r, ch, st, vl) in enumerate(rows):
+                tokens[i], start[i], vlen[i] = ch, st, vl
+            table = pool.table_array([r.rid for r, *_ in rows],
+                                     state.b_prefill, state.max_nb)
+            state.key, k1 = jax.random.split(state.key)
+            pool.data, tok = state.fns[0](self.params, pool.data, table,
+                                          tokens, start, vlen, k1)
+            tok_np = np.asarray(tok)
+            now = state.now
+            for i, (r, ch, st, vl) in enumerate(rows):
+                sched.note_prefilled(r, vl, int(tok_np[i]), now)
+            state.prefill_steps += 1
+
+        drows = sched.pack_decode()
+        if drows:
+            tokens = np.zeros((state.b_decode,), np.int32)
+            pos = np.zeros((state.b_decode,), np.int32)
+            live = np.zeros((state.b_decode,), np.int32)
+            for i, r in enumerate(drows):
+                tokens[i], pos[i], live[i] = r.out[-1], r.decode_pos, 1
+            table = pool.table_array([r.rid for r in drows],
+                                     state.b_decode, state.max_nb)
+            state.key, k2 = jax.random.split(state.key)
+            pool.data, tok = state.fns[1](self.params, pool.data, table,
+                                          tokens, pos, live, k2)
+            tok_np = np.asarray(tok)
+            now = state.now
+            for i, r in enumerate(drows):
+                sched.note_decoded(r, int(tok_np[i]), now)
+            state.occupancy.append(len(drows) / state.b_decode)
+            state.decode_steps += 1
+
+        state.steps += 1
+        return len(rows), len(drows)
+
+    def serve(self, requests: Sequence, *, block_size: Optional[int] = None,
+              num_blocks: Optional[int] = None,
+              max_prefill_tokens: Optional[int] = None,
+              max_decode_batch: int = 8, key=None) -> ServeResult:
+        """Serve a request trace with continuous batching.
+
+        ``requests``: serving.request.Request objects (arrival_s offsets
+        are honoured against the wall clock).  Each engine step packs up to
+        ``max_prefill_tokens`` of pending prompt chunks plus every active
+        decode token; admission is FCFS against pool capacity and the
+        ``max_decode_batch`` batch-slot bound.  Greedy outputs are
+        token-identical to per-request ``generate`` (tests/test_scheduler)."""
+        requests = list(requests)
+        if not requests:
+            return ServeResult({}, {}, {}, 0.0, 0, 0.0,
+                               method=self.method, backend=self.backend)
+        state = self.make_serve_state(
+            requests, block_size=block_size, num_blocks=num_blocks,
+            max_prefill_tokens=max_prefill_tokens,
+            max_decode_batch=max_decode_batch, key=key)
+        sched = state.sched
+        pending = sorted(requests, key=lambda r: r.arrival_s)
+        state.t0 = time.perf_counter()
+        while pending or sched.pending():
+            now = state.now
+            while pending and pending[0].arrival_s <= now:
+                sched.add(pending.pop(0))
+            if not sched.pending():
+                time.sleep(min(1e-3, max(0.0, pending[0].arrival_s - now)))
+                continue
+            n_pf, n_dec = self.step(state)
+            if n_pf == 0 and n_dec == 0 and sched.pending():
+                raise RuntimeError(
+                    "scheduler stall: pending requests but nothing packed")
+
+        wall = state.now
+        num_blocks = state.pool.num_blocks
+        state.pool.check_invariants()
+        assert state.pool.num_free == num_blocks, "blocks leaked after drain"
+        done = sched.done
+        generated = sum(len(r.out) for r in done)
+        return ServeResult(
+            tokens={r.rid: np.asarray(r.out, np.int32) for r in done},
+            ttft_s={r.rid: r.ttft_s for r in done},
+            latency_s={r.rid: r.done_s - r.arrival_s for r in done},
+            wall_s=wall, generated=generated,
+            tokens_per_s=generated / wall if wall > 0 else 0.0,
+            steps=state.steps, prefill_steps=state.prefill_steps,
+            decode_steps=state.decode_steps,
+            occupancy=(float(np.mean(state.occupancy))
+                       if state.occupancy else 0.0),
+            method=self.method, backend=self.backend)

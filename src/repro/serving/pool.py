@@ -1,0 +1,169 @@
+"""Paged KV pool for continuous batching.
+
+The device-side store is literally ``model.init_cache(num_blocks,
+block_size)``: the cache's BATCH axis becomes the physical-block axis and
+its capacity axis the within-block slot axis.  Every leaf therefore keeps
+the ``pos``-derived mask semantics of serving/cache.py (``pos == -1`` marks
+an empty/invalid slot), so full, QUOKA-selected and baseline-selected
+attention over gathered views all share the one position-mask code path.
+
+A request's logical cache is the concatenation of its blocks in
+block-table order, materialised per step by ``gather`` (block-table indexed
+``jnp.take`` with out-of-range fill: table id -1 reads as an empty block)
+and written back by ``scatter`` (table id -1 / untouched blocks drop).
+Host-side bookkeeping (free-list, per-request tables) lives on
+``PagedKVCache``; the gather/scatter functions are pure and live inside the
+engine's jitted step functions.
+
+Supported cache kinds: linear attention KV ("attn", "attn_moe", "enc-free
+GQA) and MLA latent caches.  Recurrent states (mamba/rwkv) do not
+block-decompose over time, whisper cross-KV is encoder-owned, and
+sliding-window ring buffers wrap at the window rather than the block — all
+three are rejected at pool construction.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_UNSUPPORTED_KINDS = ("mamba", "mamba_shared_attn", "rwkv", "dec_cross",
+                      "attn_local")
+
+
+def blocks_for_request(prompt_len: int, max_new: int, chunk_size: int,
+                       block_size: int) -> int:
+    """Blocks reserved at admission (conservative: no mid-flight OOM).
+
+    Prefill writes whole B_CP chunks (the ragged tail is right-padded with
+    pos = -1 garbage that decode later overwrites), so the reservation
+    covers max(chunk-padded prompt, prompt + max_new) slots."""
+    padded = -(-prompt_len // chunk_size) * chunk_size
+    span = max(padded, prompt_len + max_new)
+    return -(-span // block_size)
+
+
+class PagedKVCache:
+    """Fixed-size-block KV pool + per-request block tables + free-list."""
+
+    def __init__(self, model, num_blocks: int, block_size: int):
+        kinds = [k for s in model.stacks for k in s.period]
+        bad = sorted(set(k for k in kinds if k in _UNSUPPORTED_KINDS))
+        if bad:
+            raise ValueError(
+                f"paged KV pool supports attention/MLA caches only; "
+                f"model has unsupported block kinds {bad}")
+        if model.cfg.family == "vlm":
+            raise ValueError("paged KV pool does not support VLM frontends")
+        self.model = model
+        self.num_blocks = int(num_blocks)
+        self.block_size = int(block_size)
+        self.data = model.init_cache(self.num_blocks, self.block_size)
+        self._free: List[int] = list(range(self.num_blocks))
+        self._tables: Dict[int, List[int]] = {}
+
+    # ---- free-list bookkeeping ------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_allocated(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, rid: int, n: int) -> List[int]:
+        if rid in self._tables:
+            raise RuntimeError(f"request {rid} already holds blocks")
+        if n > len(self._free):
+            raise RuntimeError(
+                f"pool exhausted: need {n} blocks, {len(self._free)} free")
+        blocks = [self._free.pop() for _ in range(n)]
+        self._tables[rid] = blocks
+        return blocks
+
+    def free(self, rid: int) -> None:
+        blocks = self._tables.pop(rid)   # KeyError on double free
+        self._free.extend(blocks)
+
+    def table(self, rid: int) -> List[int]:
+        return self._tables[rid]
+
+    def table_array(self, rids: Sequence[int], rows: int,
+                    max_blocks: int) -> np.ndarray:
+        """(rows, max_blocks) int32 block table, -1 padded (empty block).
+        Rows beyond len(rids) are idle (all -1)."""
+        tab = np.full((rows, max_blocks), -1, np.int32)
+        for i, rid in enumerate(rids):
+            blocks = self._tables[rid]
+            tab[i, :len(blocks)] = blocks
+        return tab
+
+    def check_invariants(self) -> None:
+        """No block leaked, none double-allocated, none double-freed."""
+        allocated = [b for t in self._tables.values() for b in t]
+        assert len(set(allocated)) == len(allocated), "block double-allocated"
+        assert len(set(self._free)) == len(self._free), "block double-freed"
+        assert sorted(allocated + self._free) == list(range(self.num_blocks)), \
+            "block leaked or invented"
+
+
+# ---------------------------------------------------------------------------
+# pure gather/scatter (used inside the engine's jitted step functions)
+# ---------------------------------------------------------------------------
+
+def gather(data, table, num_blocks: int, block_size: int):
+    """Materialise per-request linear caches from the pool.
+
+    table: (b, max_nb) int32 physical block ids, -1 = empty.  Returns a
+    cache pytree whose KV leaves are (R, b, max_nb * block_size, ...) — a
+    standard linear cache view; empty blocks read as pos = -1 / zeros, so
+    the position-mask machinery needs no special case."""
+    b, nb = table.shape
+    idx = jnp.where(table < 0, num_blocks, table).reshape(-1)
+
+    def g(leaf):
+        if leaf.ndim < 3:
+            return leaf                          # enc_done & friends
+        fill = -1 if jnp.issubdtype(leaf.dtype, jnp.integer) else 0
+        out = jnp.take(leaf, idx, axis=1, mode="fill", fill_value=fill)
+        return out.reshape(leaf.shape[0], b, nb * block_size,
+                           *leaf.shape[3:])
+
+    return jax.tree.map(g, data)
+
+
+def scatter(data, gathered, table, touched, num_blocks: int,
+            block_size: int):
+    """Write gathered views back into the pool.
+
+    ``touched`` (b, max_nb) bool limits the write to blocks the step
+    actually modified; untouched and null (-1) table entries are mapped out
+    of range and dropped."""
+    b, nb = table.shape
+    idx = jnp.where((table >= 0) & touched, table, num_blocks).reshape(-1)
+
+    def s(pool_leaf, gath_leaf):
+        if pool_leaf.ndim < 3:
+            return pool_leaf
+        blocks = gath_leaf.reshape(gath_leaf.shape[0], b * nb, block_size,
+                                   *gath_leaf.shape[3:])
+        return pool_leaf.at[:, idx].set(blocks.astype(pool_leaf.dtype),
+                                        mode="drop")
+
+    return jax.tree.map(s, data, gathered)
+
+
+def touched_blocks(slot, n_tokens, max_nb: int, block_size: int):
+    """(b, max_nb) bool: logical blocks covered by a write of ``n_tokens``
+    rows starting at ``slot`` (both (b,) int32; n_tokens == 0 -> none)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    n = jnp.asarray(n_tokens, jnp.int32)
+    lo = slot // block_size
+    hi = (slot + jnp.maximum(n, 1) - 1) // block_size
+    ar = jnp.arange(max_nb, dtype=jnp.int32)[None]
+    return (ar >= lo[:, None]) & (ar <= hi[:, None]) & (n > 0)[:, None]

@@ -1,0 +1,73 @@
+"""Request lifecycle for the continuous-batching scheduler.
+
+A request moves WAITING -> PREFILL -> DECODE -> DONE:
+
+  WAITING  queued; not yet admitted (pool capacity / batch-slot gated)
+  PREFILL  admitted; its prompt is being consumed chunk-by-chunk (B_CP at a
+           time, interleaved with other requests' chunks and decodes)
+  DECODE   prompt fully prefilled; one token per engine decode step
+  DONE     finished on EOS / stop / length; its pool blocks are freed
+
+All fields are host-side bookkeeping (numpy / python) — device state lives
+in the paged pool (serving/pool.py), addressed by the request's block table.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+WAITING = "waiting"
+PREFILL = "prefill"
+DECODE = "decode"
+DONE = "done"
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray              # (T,) int32 prompt
+    max_new: int
+    eos_id: Optional[int] = None    # stop token (None = length-only)
+    arrival_s: float = 0.0          # arrival offset into the trace
+    # ---- runtime state (scheduler-owned) ----
+    status: str = WAITING
+    n_prefilled: int = 0            # prompt tokens consumed so far
+    out: List[int] = field(default_factory=list)   # generated tokens
+    ttft_s: Optional[float] = None
+    done_s: Optional[float] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.shape[0])
+
+    @property
+    def decode_pos(self) -> int:
+        """Cache slot / absolute position of the NEXT decode write: the
+        last emitted token (not yet in the cache) goes at this position."""
+        return self.prompt_len + len(self.out) - 1
+
+    def next_chunk(self, chunk_size: int):
+        """(tokens (chunk_size,), start, valid_len) for the next prompt
+        chunk; the tail chunk is right-padded with zeros (pos = -1)."""
+        start = self.n_prefilled
+        vlen = min(chunk_size, self.prompt_len - start)
+        buf = np.zeros((chunk_size,), np.int32)
+        buf[:vlen] = self.tokens[start:start + vlen]
+        return buf, start, vlen
+
+    def finished(self) -> bool:
+        if len(self.out) >= self.max_new:
+            return True
+        return (self.eos_id is not None and len(self.out) > 0
+                and self.out[-1] == self.eos_id)
+
+
+def make_requests(prompts, max_new: int, *, eos_id: Optional[int] = None,
+                  arrivals=None) -> List[Request]:
+    """Convenience: one Request per 1-D prompt array."""
+    arrivals = arrivals if arrivals is not None else [0.0] * len(prompts)
+    return [Request(rid=i, tokens=np.asarray(p, np.int32).reshape(-1),
+                    max_new=max_new, eos_id=eos_id, arrival_s=float(a))
+            for i, (p, a) in enumerate(zip(prompts, arrivals))]

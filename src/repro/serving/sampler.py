@@ -27,7 +27,13 @@ def sample(logits, key, cfg: SamplerConfig):
         srt = jnp.sort(lg, axis=-1)[:, ::-1]
         probs = jax.nn.softmax(srt, axis=-1)
         csum = jnp.cumsum(probs, axis=-1)
-        cutoff_idx = jnp.sum(csum < cfg.top_p, axis=-1, keepdims=True)
+        # index of the token whose cumulative mass crosses p (kept).  Two
+        # degenerate edges: csum[0] >= p gives cutoff 0 — the nucleus is
+        # "empty" but the max-prob token must always survive — and float
+        # rounding can leave csum[-1] < p, pushing the count to V; clamp it.
+        cutoff_idx = jnp.minimum(jnp.sum(csum < cfg.top_p, axis=-1,
+                                         keepdims=True), lg.shape[-1] - 1)
         kth = jnp.take_along_axis(srt, cutoff_idx, axis=-1)
-        lg = jnp.where(lg < kth, -jnp.inf, lg)
+        keep = (lg >= kth) | (lg >= jnp.max(lg, axis=-1, keepdims=True))
+        lg = jnp.where(keep, lg, -jnp.inf)
     return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)

@@ -1,0 +1,122 @@
+"""Continuous-batching scheduler (Sarathi-style chunked-prefill packing).
+
+Policy, per engine step:
+
+  1. ``admit``: WAITING requests move to PREFILL in FCFS order while (a) a
+     batch slot is free (active requests < ``max_decode_batch``) and (b)
+     the pool can reserve their blocks.  Reservation is conservative —
+     ceil((padded_prompt + max_new) / block_size) blocks up front — so a
+     running request can never OOM mid-flight (no preemption needed).
+     Head-of-line blocking is deliberate: FCFS keeps TTFT fair.
+  2. ``pack_prefill``: up to ``max_prefill_tokens`` worth of pending prompt
+     chunks, one B_CP chunk per request (chunks of one request are
+     sequential — its next chunk needs this one's KV).
+  3. ``pack_decode``: ALL active decode requests (bounded by admission).
+
+Completion (EOS / stop / length) frees the request's blocks immediately.
+The scheduler is pure host-side policy; device work happens in the engine.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+from repro.serving import request as rq
+from repro.serving.pool import PagedKVCache, blocks_for_request
+
+
+class Scheduler:
+    def __init__(self, pool: PagedKVCache, chunk_size: int,
+                 max_prefill_tokens: int, max_decode_batch: int):
+        assert max_prefill_tokens >= chunk_size, \
+            "max_prefill_tokens must fit at least one chunk"
+        self.pool = pool
+        self.chunk_size = int(chunk_size)
+        self.max_prefill_tokens = int(max_prefill_tokens)
+        self.max_decode_batch = int(max_decode_batch)
+        self.waiting: List[rq.Request] = []
+        self.prefilling: List[rq.Request] = []
+        self.decoding: List[rq.Request] = []
+        self.done: List[rq.Request] = []
+
+    # ------------------------------------------------------------------
+    def blocks_needed(self, r: rq.Request) -> int:
+        return blocks_for_request(r.prompt_len, r.max_new, self.chunk_size,
+                                  self.pool.block_size)
+
+    def add(self, r: rq.Request) -> None:
+        n = self.blocks_needed(r)
+        if n > self.pool.num_blocks:
+            raise ValueError(
+                f"request {r.rid} needs {n} blocks > pool size "
+                f"{self.pool.num_blocks}; it can never be admitted")
+        # reset ALL runtime state so a Request object can be re-served
+        # (warmup-then-measure traces); stale n_prefilled/out would make a
+        # re-served request complete instantly with the previous run's tokens
+        r.status = rq.WAITING
+        r.n_prefilled = 0
+        r.out = []
+        r.ttft_s = None
+        r.done_s = None
+        self.waiting.append(r)
+
+    def pending(self) -> bool:
+        return bool(self.waiting or self.prefilling or self.decoding)
+
+    @property
+    def n_active(self) -> int:
+        return len(self.prefilling) + len(self.decoding)
+
+    # ------------------------------------------------------------------
+    def admit(self) -> List[rq.Request]:
+        admitted = []
+        while self.waiting and self.n_active < self.max_decode_batch:
+            r = self.waiting[0]
+            n = self.blocks_needed(r)
+            if not self.pool.can_alloc(n):
+                break                      # FCFS: no skipping the head
+            self.pool.alloc(r.rid, n)
+            r.status = rq.PREFILL
+            self.prefilling.append(self.waiting.pop(0))
+            admitted.append(r)
+        return admitted
+
+    def pack_prefill(self) -> List[Tuple[rq.Request, "object", int, int]]:
+        """[(request, chunk_tokens, start, valid_len)] — one chunk per
+        request, FCFS, until the token budget is spent."""
+        rows = []
+        budget = self.max_prefill_tokens
+        for r in self.prefilling:
+            if budget < self.chunk_size:
+                break
+            tok, start, vlen = r.next_chunk(self.chunk_size)
+            rows.append((r, tok, start, vlen))
+            budget -= self.chunk_size
+        return rows
+
+    def note_prefilled(self, r: rq.Request, vlen: int,
+                       first_token: Optional[int], now: float) -> None:
+        r.n_prefilled += vlen
+        if r.n_prefilled >= r.prompt_len:
+            r.status = rq.DECODE
+            r.out.append(int(first_token))
+            r.ttft_s = now - r.arrival_s
+            self.prefilling.remove(r)
+            if r.finished():               # max_new == 1 or instant EOS
+                self._finish(r, now)
+            else:
+                self.decoding.append(r)
+
+    def pack_decode(self) -> List[rq.Request]:
+        return list(self.decoding)
+
+    def note_decoded(self, r: rq.Request, token: int, now: float) -> None:
+        r.out.append(int(token))
+        if r.finished():
+            self.decoding.remove(r)
+            self._finish(r, now)
+
+    def _finish(self, r: rq.Request, now: float) -> None:
+        r.status = rq.DONE
+        r.done_s = now
+        self.pool.free(r.rid)              # eviction: blocks back to the pool
+        self.done.append(r)

@@ -84,9 +84,9 @@ def test_engine_generate_greedy_deterministic():
     p = model.init(KEY)
     eng = Engine(model, p, method="quoka")
     toks = np.asarray(jax.random.randint(KEY, (2, 48), 0, cfg.vocab))
-    prompt = eng.pad_prompt(toks)
-    r1 = eng.generate({"tokens": jnp.asarray(prompt)}, 6)
-    r2 = eng.generate({"tokens": jnp.asarray(prompt)}, 6)
+    batch = eng.pad_prompt(toks)
+    r1 = eng.generate(batch, 6)
+    r2 = eng.generate(batch, 6)
     assert (r1.tokens == r2.tokens).all()
     assert r1.tokens.shape == (2, 6)
     assert r1.ttft_s > 0
@@ -99,3 +99,64 @@ def test_sampler_modes():
     assert bool(jnp.isin(t, jnp.asarray([1, 2])).all())
     t = sample(logits, KEY, SamplerConfig(temperature=1.0, top_p=0.5))
     assert (t == 1).all()
+
+
+def test_sampler_top_p_degenerate_keeps_max():
+    """When top_p keeps zero tokens (csum[0] >= p, cutoff_idx == 0) the
+    max-prob token must always survive — for any p, including p ~ 0 and
+    p = 1.0 where float cumsum rounding can push the cutoff out of range."""
+    logits = jnp.asarray([[0.0, 5.0, 1.0, -2.0]] * 2)
+    for p in (1e-9, 0.5, 1.0):
+        for i in range(5):
+            k = jax.random.fold_in(KEY, i)
+            t = sample(logits, k, SamplerConfig(temperature=1.0, top_p=p))
+            assert int(t.min()) >= 0 and int(t.max()) < 4
+            if p <= 0.5:            # nucleus collapses to the argmax
+                assert (t == 1).all(), (p, t)
+    # uniform logits: every token ties for max; sampling must stay valid
+    t = sample(jnp.zeros((3, 8)), KEY,
+               SamplerConfig(temperature=1.0, top_p=1e-9))
+    assert bool((t >= 0).all()) and bool((t < 8).all())
+
+
+def test_pad_prompt_masks_pads_from_context():
+    """Satellite regression: left-pad slots must carry pos == -1 — excluded
+    from attention, selection scoring and the cache — so a padded prefill
+    reproduces the unpadded forward at the last position."""
+    cfg = get_config("granite-3-2b").smoke()
+    model = build_model(cfg)
+    p = model.init(KEY)
+    toks = np.asarray(jax.random.randint(KEY, (2, 24), 3, cfg.vocab))
+    eng = Engine(model, p, method="full")
+    batch = eng.pad_prompt(toks)
+    assert batch["tokens"].shape == (2, 32) and (batch["pad"] == 8).all()
+
+    train_logits, _ = model.train_logits(p, {"tokens": jnp.asarray(toks)})
+    cache = model.init_cache(2, 48)
+    pf, cache = model.prefill(
+        p, {"tokens": jnp.asarray(batch["tokens"]),
+            "pad": jnp.asarray(batch["pad"])}, cache, "full")
+    np.testing.assert_allclose(np.asarray(pf),
+                               np.asarray(train_logits[:, -1]),
+                               atol=2e-3, rtol=2e-3)
+    # the cache itself marks pad slots invalid
+    kv_pos = np.asarray(cache.stacks[0][0].kv.pos)      # (R, b, cap)
+    assert (kv_pos[:, :, :8] == -1).all()
+    assert (kv_pos[:, :, 8:32] >= 0).all()
+
+
+def test_padded_generate_matches_unpadded_quoka():
+    """Greedy generation from a padded prompt equals generation from the
+    same prompt served unpadded (continuous path) — pads cannot skew
+    QUOKA's query/key statistics."""
+    from repro.serving.request import make_requests
+    cfg = get_config("granite-3-2b").smoke()
+    model = build_model(cfg)
+    p = model.init(KEY)
+    eng = Engine(model, p, method="quoka")
+    prompt = np.asarray(jax.random.randint(KEY, (40,), 3, cfg.vocab),
+                        np.int32)
+    ref = eng.generate(eng.pad_prompt(prompt[None]), 5).tokens[0]
+    res = eng.serve(make_requests([prompt], 5), block_size=16,
+                    max_decode_batch=2)
+    np.testing.assert_array_equal(res.tokens[0], ref)

@@ -67,7 +67,6 @@ def test_generation_roundtrip(retrieval_model):
     eng = Engine(model, params, method="quoka")
     rng = np.random.default_rng(3)
     batch = needle_batch(rng, cfg.vocab, 4, 97, n_keys=16)
-    prompt = eng.pad_prompt(np.asarray(batch["tokens"][:, :-1]))
-    res = eng.generate({"tokens": jnp.asarray(prompt)}, 4)
+    res = eng.generate(eng.pad_prompt(np.asarray(batch["tokens"][:, :-1])), 4)
     assert res.tokens.shape == (4, 4)
     assert res.ttft_s > 0 and np.isfinite(res.decode_tps)
