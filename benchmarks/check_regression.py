@@ -1,0 +1,164 @@
+"""Benchmark-regression gate for the fast CI tier.
+
+Compares the smoke-run JSONs in ``benchmarks/out/`` against committed
+baselines in ``benchmarks/baselines/`` and fails (exit 1) when a gated
+metric regresses beyond its tolerance band — so the perf trajectory is
+recorded AND enforced, not just uploaded as an artifact.
+
+Baseline schema (``benchmarks/baselines/<bench>.json``)::
+
+    {"metrics": [
+       {"name": "...",                      # label for the report
+        "match": {"mode": "cached", ...},   # fields a record must equal
+        "field": "ttft_speedup",            # value under comparison
+        "ratio_to": {"method": "full"},     # optional: divide by the same
+                                            # field of this other record
+        "direction": "higher",              # higher|lower is better
+        "baseline": 5.8,                    # committed reference value
+        "rel_tol": 0.5,                     # band: value may be up to 50%
+                                            # worse than baseline
+        "floor": 1.5,                       # optional absolute bound a
+                                            # value must never cross,
+                                            # regardless of the baseline
+        "informational": false}]}           # true: record + report, but an
+                                            # out-of-band value does NOT
+                                            # fail the gate
+
+Absolute timings vary across CI runners (GitHub VMs differ severalfold in
+speed from the machine that recorded the baseline), so only RATIO metrics
+(speedups, hit rates) gate the tier; mark absolute-timing metrics
+``informational`` — they are still computed, reported and uploaded in the
+perf-trajectory artifact.  A GATED metric whose records are missing from
+``out/`` fails — a silently skipped scenario must not pass.
+
+    PYTHONPATH=src python -m benchmarks.run --suite serving --smoke
+    PYTHONPATH=src python -m benchmarks.check_regression [--update]
+
+``--update`` rewrites the committed ``baseline`` values from the current
+``out/`` JSONs (tolerances and floors are kept) — run it on an intended
+perf change and commit the refreshed baselines with it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+HERE = os.path.dirname(__file__)
+
+
+def _load(path: str):
+    with open(path) as f:
+        return json.load(f)
+
+
+def _select(records: List[Dict], match: Dict) -> List[Dict]:
+    return [r for r in records
+            if all(r.get(k) == v for k, v in match.items())]
+
+
+def _value(records: List[Dict], metric: Dict) -> Optional[float]:
+    """Metric value from the out-JSON records (median over matches), as a
+    ratio against ``ratio_to`` records when given.  None = missing."""
+    field = metric["field"]
+    num = sorted(float(r[field]) for r in _select(records, metric["match"])
+                 if field in r)
+    if not num:
+        return None
+    val = num[len(num) // 2]
+    if "ratio_to" in metric:
+        den = sorted(float(r[field])
+                     for r in _select(records, metric["ratio_to"])
+                     if field in r)
+        if not den or den[len(den) // 2] == 0:
+            return None
+        val = val / den[len(den) // 2]
+    return val
+
+
+def _check(metric: Dict, value: Optional[float]) -> List[str]:
+    """Failure reasons ([] = pass)."""
+    if value is None:
+        return ["metric missing from benchmark output"]
+    higher = metric.get("direction", "higher") == "higher"
+    base = float(metric["baseline"])
+    tol = float(metric.get("rel_tol", 0.5))
+    fails = []
+    bound = base * (1.0 - tol) if higher else base * (1.0 + tol)
+    if higher and value < bound:
+        fails.append(f"{value:.4g} < tolerance bound {bound:.4g} "
+                     f"(baseline {base:.4g}, rel_tol {tol})")
+    if not higher and value > bound:
+        fails.append(f"{value:.4g} > tolerance bound {bound:.4g} "
+                     f"(baseline {base:.4g}, rel_tol {tol})")
+    if "floor" in metric and higher and value < float(metric["floor"]):
+        fails.append(f"{value:.4g} < hard floor {metric['floor']}")
+    if "cap" in metric and not higher and value > float(metric["cap"]):
+        fails.append(f"{value:.4g} > hard cap {metric['cap']}")
+    return fails
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(HERE, "out"),
+                    help="directory of fresh benchmark JSONs")
+    ap.add_argument("--baselines", default=os.path.join(HERE, "baselines"),
+                    help="directory of committed baseline JSONs")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite baseline values from the current out/ "
+                         "JSONs instead of checking")
+    args = ap.parse_args()
+
+    names = sorted(f[:-5] for f in os.listdir(args.baselines)
+                   if f.endswith(".json"))
+    if not names:
+        print("no baselines committed; nothing to gate", file=sys.stderr)
+        return 1
+    failures = 0
+    for bench in names:
+        bpath = os.path.join(args.baselines, f"{bench}.json")
+        opath = os.path.join(args.out, f"{bench}.json")
+        baseline = _load(bpath)
+        records = _load(opath) if os.path.exists(opath) else []
+        if not records:
+            print(f"FAIL {bench}: no benchmark output at {opath}")
+            failures += 1
+            continue
+        for metric in baseline["metrics"]:
+            value = _value(records, metric)
+            if args.update:
+                if value is None:
+                    print(f"FAIL {bench}/{metric['name']}: cannot update, "
+                          f"metric missing from output")
+                    failures += 1
+                else:
+                    metric["baseline"] = round(value, 6)
+                    print(f"set  {bench}/{metric['name']} = {value:.4g}")
+                continue
+            reasons = _check(metric, value)
+            info = bool(metric.get("informational"))
+            status = ("info" if info and reasons
+                      else "FAIL" if reasons else "ok")
+            shown = "missing" if value is None else f"{value:.4g}"
+            print(f"{status:4s} {bench}/{metric['name']}: {shown} "
+                  f"(baseline {metric['baseline']}, "
+                  f"{metric.get('direction', 'higher')} is better"
+                  f"{', informational' if info else ''})")
+            for r in reasons:
+                print(f"     -> {r}")
+            failures += bool(reasons) and not info
+        if args.update:
+            with open(bpath, "w") as f:
+                json.dump(baseline, f, indent=2)
+                f.write("\n")
+    if failures:
+        print(f"\n{failures} regression(s) beyond tolerance", file=sys.stderr)
+        return 1
+    print("\nall gated metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

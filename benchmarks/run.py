@@ -1,6 +1,7 @@
 """Benchmark driver — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py); every
+module also writes structured JSON to ``benchmarks/out/<name>.json``.
 
   attn_latency     Figure 5(a)/(c)  attention-module latency vs length
   ttft             Figure 5(b)/(d)  end-to-end time-to-first-token
@@ -11,38 +12,61 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
   complexity       Table 4          analytic + measured scoring complexity
   roofline_table   EXPERIMENTS §Roofline (from dry-run artifacts)
   serving_throughput  §4.6 under load: continuous batching vs one-at-a-time
+                      + the prefix_reuse (cache-hit TTFT) scenario
+
+Suites bundle related benchmarks:
+
+  --suite serving  serving_throughput (throughput + prefix_reuse) + ttft —
+                   the set the CI regression gate checks
+                   (benchmarks/check_regression.py); combine with --smoke
+                   for the fast-tier geometry.
 """
 import argparse
 import sys
 import traceback
+
+SUITES = {
+    "serving": ("serving_throughput", "ttft"),
+}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benchmark names")
+    ap.add_argument("--suite", default=None, choices=sorted(SUITES),
+                    help="named benchmark bundle (e.g. 'serving' runs "
+                         "throughput + ttft + prefix_reuse in one go)")
     ap.add_argument("--fast", action="store_true",
                     help="skip the slow trained-model NIAH benchmark")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny geometries for the fast CI tier (benchmarks "
+                         "that support it)")
     args = ap.parse_args()
 
     from benchmarks import (ablations, accuracy_proxy, attn_latency,
                             complexity, decode_latency, niah, roofline_table,
                             serving_throughput, ttft)
+    smoke = {"smoke": True} if args.smoke else {}
     todo = {
         "attn_latency": attn_latency.run,
-        "ttft": ttft.run,
+        "ttft": lambda: ttft.run(**smoke),
         "decode_latency": decode_latency.run,
         "accuracy_proxy": accuracy_proxy.run,
         "ablations": ablations.run,
         "complexity": complexity.run,
         "niah": niah.run,
         "roofline_table": roofline_table.run,
-        "serving_throughput": serving_throughput.run,
+        "serving_throughput": lambda: serving_throughput.run(**smoke),
     }
     if args.fast:
         todo.pop("niah")
+    keep = set()
+    if args.suite:
+        keep |= set(SUITES[args.suite])
     if args.only:
-        keep = set(args.only.split(","))
+        keep |= set(args.only.split(","))
+    if keep:
         todo = {k: v for k, v in todo.items() if k in keep}
     print("name,us_per_call,derived")
     failures = []

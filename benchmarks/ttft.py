@@ -17,11 +17,17 @@ from repro.models.model import build_model
 from repro.serving.engine import Engine
 
 LENGTHS = (1024, 2048, 4096)
+SMOKE_LENGTHS = (512, 1024)
 
 
-def run(lengths=LENGTHS):
+def run(lengths=LENGTHS, *, smoke: bool = False):
+    """``smoke``: short lengths + a smaller model for the fast CI tier (the
+    regression gate compares the quoka/full TTFT ratio, which is stable
+    across runner speeds)."""
     header("ttft (Fig 5b/d)")
     mark = json_mark()
+    if smoke:
+        lengths = SMOKE_LENGTHS
     cfg = get_config("qwen3-4b").smoke(n_layers=4, d_model=256, n_heads=8,
                                        n_kv_heads=2, d_ff=512, vocab=2048)
     cfg = dataclasses.replace(
@@ -52,4 +58,8 @@ def run(lengths=LENGTHS):
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short lengths for the fast CI tier")
+    run(smoke=ap.parse_args().smoke)

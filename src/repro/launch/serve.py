@@ -6,10 +6,18 @@ One-shot batch mode (TTFT / decode throughput, paper §4.6):
         --prompt-len 1024 --max-new 32 --method quoka
 
 Continuous-batching trace mode (paged KV pool + chunked-prefill/decode
-scheduler; Poisson arrivals):
+scheduler + cross-request prefix caching; Poisson arrivals):
 
     PYTHONPATH=src python -m repro.launch.serve --smoke --continuous \
         --n-requests 16 --rate 8 --max-decode-batch 8
+
+Prefix-cache-heavy traces — a shared system prompt, or multi-turn
+conversations whose every turn re-sends the growing conversation:
+
+    PYTHONPATH=src python -m repro.launch.serve --smoke --continuous \
+        --trace shared --shared-len 256 --n-requests 8
+    PYTHONPATH=src python -m repro.launch.serve --smoke --continuous \
+        --trace multiturn --turns 4 --turn-gap 0.5 [--no-prefix-cache]
 
 Loads a checkpoint if given (random init otherwise — latency numbers are
 weight-independent) and reports TTFT / throughput / batch occupancy.
@@ -32,22 +40,67 @@ from repro.serving.sampler import SamplerConfig
 from repro.training import checkpoint as ckpt
 
 
+def _build_trace(model, args, rng):
+    """(prompts, arrivals) for one of three trace shapes:
+
+      poisson    independent random prompts, Poisson arrivals (--rate)
+      shared     every prompt opens with one shared system prompt of
+                 --shared-len tokens (the cross-request prefix-cache case)
+      multiturn  conversations of --turns turns; each turn's prompt extends
+                 the previous turn's prompt with fresh tokens, arriving
+                 --turn-gap seconds apart (synthetic: extensions are random
+                 tokens, not the model's own replies — latency is
+                 weight-independent either way)
+    """
+    vocab = model.cfg.vocab
+    if args.trace in ("poisson", "shared"):
+        arrivals = (np.zeros(args.n_requests) if np.isinf(args.rate)
+                    else np.cumsum(rng.exponential(1.0 / args.rate,
+                                                   args.n_requests)))
+        if args.trace == "poisson":
+            lens = rng.integers(max(1, args.prompt_len // 2),
+                                args.prompt_len + 1, args.n_requests)
+            prompts = [rng.integers(3, vocab, (int(n),)).astype(np.int32)
+                       for n in lens]
+        else:
+            sys_tok = rng.integers(3, vocab,
+                                   (args.shared_len,)).astype(np.int32)
+            sfx = max(1, args.prompt_len - args.shared_len)
+            prompts = [np.concatenate(
+                [sys_tok, rng.integers(3, vocab,
+                                       (int(rng.integers(1, sfx + 1)),)
+                                       ).astype(np.int32)])
+                for _ in range(args.n_requests)]
+        return prompts, arrivals
+    assert args.trace == "multiturn"
+    n_conv = max(1, args.n_requests // args.turns)
+    ext = max(1, args.prompt_len // (2 * args.turns))
+    prompts, arrivals = [], []
+    for c in range(n_conv):
+        start = (0.0 if np.isinf(args.rate)
+                 else float(rng.exponential(args.turns / args.rate)) * c)
+        cur = rng.integers(3, vocab,
+                           (args.prompt_len // 2,)).astype(np.int32)
+        for t in range(args.turns):
+            if t:
+                cur = np.concatenate(
+                    [cur, rng.integers(3, vocab, (ext,)).astype(np.int32)])
+            prompts.append(cur.copy())
+            arrivals.append(start + t * args.turn_gap)
+    return prompts, np.asarray(arrivals)
+
+
 def run_continuous(model, params, args):
-    """Trace-driven continuous batching: Poisson arrivals at --rate req/s,
-    prompt lengths uniform in [prompt_len/2, prompt_len]."""
+    """Trace-driven continuous batching with prefix caching (see
+    --trace / --no-prefix-cache)."""
     rng = np.random.default_rng(0)
-    lens = rng.integers(max(1, args.prompt_len // 2), args.prompt_len + 1,
-                        args.n_requests)
-    prompts = [rng.integers(3, model.cfg.vocab, (int(n),)).astype(np.int32)
-               for n in lens]
-    arrivals = (np.zeros(args.n_requests) if np.isinf(args.rate)
-                else np.cumsum(rng.exponential(1.0 / args.rate,
-                                               args.n_requests)))
+    prompts, arrivals = _build_trace(model, args, rng)
     eng = Engine(model, params, method=args.method,
                  sampler=SamplerConfig(temperature=args.temperature))
     kw = dict(block_size=args.block_size, num_blocks=args.num_blocks,
               max_prefill_tokens=args.max_prefill_tokens,
-              max_decode_batch=args.max_decode_batch)
+              max_decode_batch=args.max_decode_batch,
+              prefix_cache=not args.no_prefix_cache)
     # compile warmup with the REAL step geometry: the jit cache is keyed on
     # max_nb/num_blocks, which derive from the longest prompt and max_new
     longest = max(prompts, key=len)
@@ -62,6 +115,12 @@ def run_continuous(model, params, args):
           f"occupancy {res.occupancy:.2f}   "
           f"steps {res.steps} ({res.prefill_steps} prefill / "
           f"{res.decode_steps} decode)")
+    s = res.prefix
+    if s:
+        print(f"{'cache':10s} {s['cache_hits']}/{s['requests']} requests "
+              f"hit, {s['hit_tokens']}/{s['prompt_tokens']} prompt tokens "
+              f"served from cache ({100 * s['hit_rate']:.1f}%), "
+              f"{s['evictions']} evictions, {s['cow_copies']} COW copies")
 
 
 def main():
@@ -85,6 +144,20 @@ def main():
     ap.add_argument("--n-requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=float("inf"),
                     help="Poisson arrival rate, requests/s (inf = all at 0)")
+    ap.add_argument("--trace", default="poisson",
+                    choices=("poisson", "shared", "multiturn"),
+                    help="trace shape: independent prompts, a shared "
+                         "system prompt, or multi-turn conversations "
+                         "(the latter two exercise the prefix cache)")
+    ap.add_argument("--shared-len", type=int, default=512,
+                    help="shared system-prompt tokens (--trace shared)")
+    ap.add_argument("--turns", type=int, default=4,
+                    help="turns per conversation (--trace multiturn)")
+    ap.add_argument("--turn-gap", type=float, default=0.5,
+                    help="seconds between a conversation's turns "
+                         "(--trace multiturn)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable cross-request KV prefix caching")
     ap.add_argument("--block-size", type=int, default=None,
                     help="KV pool block size (default: chunk_size)")
     ap.add_argument("--num-blocks", type=int, default=None,

@@ -77,6 +77,8 @@ class ServeResult:
     occupancy: float = 0.0               # mean decode-batch fill [0, 1]
     method: str = ""
     backend: str = ""
+    cached_len: Dict[int, int] = field(default_factory=dict)  # rid -> prefix hit
+    prefix: Dict[str, float] = field(default_factory=dict)    # cache stats
 
 
 class Engine:
@@ -92,6 +94,7 @@ class Engine:
         self.method = method or model.cfg.quoka.method
         self.backend = kops.resolve_backend(backend, model.cfg.quoka)
         self.sampler = sampler
+        self.stats: Dict[str, float] = {}   # prefix-cache stats of last serve
         self._prefill = jax.jit(
             lambda p, batch, cache: model.prefill(p, batch, cache,
                                                   self.method,
@@ -205,26 +208,38 @@ class Engine:
         self._cont_fns[sig] = fns
         return fns
 
+    def prefix_align(self) -> int:
+        """Prefix-cache hit granularity: selection methods score per chunk,
+        so hits must land on the B_CP grid to replay the exact computation;
+        dense attention is chunking-invariant and shares at token
+        granularity (COW partial tails)."""
+        chunk = self.model.cfg.quoka.chunk_size
+        return 1 if self.method == "full" else chunk
+
     def make_serve_state(self, requests: Sequence, *,
                          block_size: Optional[int] = None,
                          num_blocks: Optional[int] = None,
                          max_prefill_tokens: Optional[int] = None,
-                         max_decode_batch: int = 8, key=None) -> ServeState:
+                         max_decode_batch: int = 8, key=None,
+                         prefix_cache: bool = True) -> ServeState:
         """Size the pool/scheduler for a request trace and compile the two
         step functions (static geometry: chunk width, prefill rows, decode
         rows, blocks per request)."""
-        from repro.serving.pool import PagedKVCache, blocks_for_request
+        from repro.serving.pool import PagedKVCache, max_blocks_bound
         from repro.serving.scheduler import Scheduler
         chunk = self.model.cfg.quoka.chunk_size
         block_size = block_size or chunk
         max_prefill_tokens = max_prefill_tokens or 4 * chunk
-        max_nb = max(blocks_for_request(r.prompt_len, r.max_new, chunk,
-                                        block_size) for r in requests)
+        align = self.prefix_align() if prefix_cache else chunk
+        max_nb = max(max_blocks_bound(r.prompt_len, r.max_new, chunk,
+                                      block_size, align=align)
+                     for r in requests)
         if num_blocks is None:
             num_blocks = max_decode_batch * max_nb    # no contention
         b_p = max(1, max_prefill_tokens // chunk)
         pool = PagedKVCache(self.model, num_blocks, block_size)
-        sched = Scheduler(pool, chunk, max_prefill_tokens, max_decode_batch)
+        sched = Scheduler(pool, chunk, max_prefill_tokens, max_decode_batch,
+                          prefix_cache=prefix_cache, prefix_align=align)
         fns = self._continuous_fns(block_size, max_nb, b_p,
                                    max_decode_batch, num_blocks)
         key = key if key is not None else jax.random.PRNGKey(0)
@@ -283,7 +298,9 @@ class Engine:
     def serve(self, requests: Sequence, *, block_size: Optional[int] = None,
               num_blocks: Optional[int] = None,
               max_prefill_tokens: Optional[int] = None,
-              max_decode_batch: int = 8, key=None) -> ServeResult:
+              max_decode_batch: Optional[int] = None, key=None,
+              prefix_cache: Optional[bool] = None,
+              state: Optional[ServeState] = None) -> ServeResult:
         """Serve a request trace with continuous batching.
 
         ``requests``: serving.request.Request objects (arrival_s offsets
@@ -291,16 +308,58 @@ class Engine:
         ``max_prefill_tokens`` of pending prompt chunks plus every active
         decode token; admission is FCFS against pool capacity and the
         ``max_decode_batch`` batch-slot bound.  Greedy outputs are
-        token-identical to per-request ``generate`` (tests/test_scheduler)."""
+        token-identical to per-request ``generate`` (tests/test_scheduler),
+        including requests admitted via a prefix-cache hit
+        (tests/test_prefix_cache).
+
+        ``prefix_cache`` (default on) shares identical prompt prefixes
+        across requests through the paged pool (multi-turn chats / shared
+        system prompts skip re-prefilling cached blocks).  Pass a ``state``
+        from ``make_serve_state`` to serve several traces over one warm
+        pool — cached blocks of earlier traces stay matchable — as long as
+        the new requests fit the compiled geometry."""
         requests = list(requests)
         if not requests:
             return ServeResult({}, {}, {}, 0.0, 0, 0.0,
                                method=self.method, backend=self.backend)
-        state = self.make_serve_state(
-            requests, block_size=block_size, num_blocks=num_blocks,
-            max_prefill_tokens=max_prefill_tokens,
-            max_decode_batch=max_decode_batch, key=key)
+        if state is None:
+            state = self.make_serve_state(
+                requests, block_size=block_size, num_blocks=num_blocks,
+                max_prefill_tokens=max_prefill_tokens,
+                max_decode_batch=(8 if max_decode_batch is None
+                                  else max_decode_batch), key=key,
+                prefix_cache=(True if prefix_cache is None
+                              else prefix_cache))
+        elif (block_size is not None or num_blocks is not None
+              or max_prefill_tokens is not None or key is not None
+              or max_decode_batch is not None or prefix_cache is not None):
+            # silently ignoring these would e.g. report cache-on numbers
+            # for a prefix_cache=False A/B pass over a warm state
+            raise ValueError(
+                "serve(state=...) reuses the state's compiled geometry and "
+                "cache configuration; pass these options to "
+                "make_serve_state instead")
         sched = state.sched
+        if sched.pending():
+            raise RuntimeError("serve state is mid-trace; drain it first")
+        from repro.serving.pool import max_blocks_bound
+        need = max(max_blocks_bound(r.prompt_len, r.max_new, state.chunk,
+                                    state.pool.block_size,
+                                    align=sched.prefix_align)
+                   for r in requests)
+        if need > state.max_nb:
+            raise ValueError(
+                f"trace needs {need} blocks/request > compiled geometry "
+                f"{state.max_nb}; build a fresh state")
+        live = {r.rid for r in requests}
+        if len(live) != len(requests):
+            raise ValueError("duplicate request ids in one trace")
+        sched.done = []                     # per-trace completion list
+        state.steps = state.prefill_steps = state.decode_steps = 0
+        state.occupancy = []
+        pool = state.pool
+        prefix0 = (pool.lookups, pool.hit_requests, pool.hit_tokens,
+                   pool.prompt_tokens, pool.evictions, pool.cow_copies)
         pending = sorted(requests, key=lambda r: r.arrival_s)
         state.t0 = time.perf_counter()
         while pending or sched.pending():
@@ -316,11 +375,23 @@ class Engine:
                     "scheduler stall: pending requests but nothing packed")
 
         wall = state.now
-        num_blocks = state.pool.num_blocks
-        state.pool.check_invariants()
-        assert state.pool.num_free == num_blocks, "blocks leaked after drain"
+        pool.check_invariants()
+        assert pool.num_free + pool.num_evictable == pool.num_blocks, \
+            "blocks leaked after drain"
         done = sched.done
         generated = sum(len(r.out) for r in done)
+        hit_tok = pool.hit_tokens - prefix0[2]
+        all_tok = pool.prompt_tokens - prefix0[3]
+        self.stats = {
+            "requests": pool.lookups - prefix0[0],
+            "cache_hits": pool.hit_requests - prefix0[1],
+            "hit_tokens": hit_tok,
+            "prompt_tokens": all_tok,
+            "hit_rate": hit_tok / all_tok if all_tok else 0.0,
+            "evictions": pool.evictions - prefix0[4],
+            "cow_copies": pool.cow_copies - prefix0[5],
+            "cached_blocks": pool.num_cached,
+        }
         return ServeResult(
             tokens={r.rid: np.asarray(r.out, np.int32) for r in done},
             ttft_s={r.rid: r.ttft_s for r in done},
@@ -331,4 +402,6 @@ class Engine:
             decode_steps=state.decode_steps,
             occupancy=(float(np.mean(state.occupancy))
                        if state.occupancy else 0.0),
-            method=self.method, backend=self.backend)
+            method=self.method, backend=self.backend,
+            cached_len={r.rid: r.cached_len for r in done},
+            prefix=dict(self.stats))

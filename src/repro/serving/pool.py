@@ -1,4 +1,4 @@
-"""Paged KV pool for continuous batching.
+"""Paged KV pool for continuous batching, with cross-request prefix caching.
 
 The device-side store is literally ``model.init_cache(num_blocks,
 block_size)``: the cache's BATCH axis becomes the physical-block axis and
@@ -15,7 +15,31 @@ Host-side bookkeeping (free-list, per-request tables) lives on
 ``PagedKVCache``; the gather/scatter functions are pure and live inside the
 engine's jitted step functions.
 
-Supported cache kinds: linear attention KV ("attn", "attn_moe", "enc-free
+Prefix caching (multi-turn chats, shared system prompts):
+
+  * FULL blocks of prompt KV are content-addressed by a rolling hash chain
+    over their token ids (``h_i = hash(h_{i-1}, tokens_of_block_i)``, so a
+    block's identity covers its whole prefix, not just its own tokens).
+  * Blocks are REFCOUNTED: a cache-hit request pins a donor's prefix blocks
+    into its own table read-only (the engine's scatter only ever writes
+    blocks at/after the request's own prefill offset, so shared blocks are
+    never written through a sharer's table).
+  * When a block's refcount drops to zero it is not recycled immediately:
+    registered (content-addressed) blocks move to an LRU list and stay
+    resident — still matchable — until memory pressure evicts them into a
+    fresh allocation.  Unregistered blocks are pos=-1-stamped and returned
+    to the plain free list, so a recycled block can never leak a previous
+    request's KV into a new allocation (stale ``pos`` values from a donor
+    that sat at a *different* logical offset would otherwise look valid to
+    the position masks).
+  * Partially filled tail blocks (prompt_len % block_size != 0) are also
+    registered, keyed by the hash of the full-block prefix they extend; a
+    new request sharing the tail gets a COPY-ON-WRITE clone — the donor's
+    block is copied into a privately owned block and the slots past the
+    shared length are pos=-1-stamped — because the sharer must immediately
+    write its own suffix into that block.
+
+Supported cache kinds: linear attention KV ("attn", "attn_moe", enc-free
 GQA) and MLA latent caches.  Recurrent states (mamba/rwkv) do not
 block-decompose over time, whisper cross-KV is encoder-owned, and
 sliding-window ring buffers wrap at the window rather than the block — all
@@ -23,7 +47,8 @@ three are rejected at pool construction.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,21 +57,55 @@ import numpy as np
 _UNSUPPORTED_KINDS = ("mamba", "mamba_shared_attn", "rwkv", "dec_cross",
                       "attn_local")
 
+# chain-hash seed for the empty prefix (any fixed int; tuples of ints hash
+# deterministically, unaffected by PYTHONHASHSEED)
+_HASH_SEED = 0x51554F4B
+
 
 def blocks_for_request(prompt_len: int, max_new: int, chunk_size: int,
-                       block_size: int) -> int:
+                       block_size: int, cached_len: int = 0) -> int:
     """Blocks reserved at admission (conservative: no mid-flight OOM).
 
     Prefill writes whole B_CP chunks (the ragged tail is right-padded with
     pos = -1 garbage that decode later overwrites), so the reservation
-    covers max(chunk-padded prompt, prompt + max_new) slots."""
-    padded = -(-prompt_len // chunk_size) * chunk_size
-    span = max(padded, prompt_len + max_new)
+    covers max(chunk-padded prefill span, prompt + max_new) slots.  With a
+    prefix-cache hit the prefill chunks start at ``cached_len``, so the
+    chunk grid — and its padded span — shifts with the hit."""
+    span = cached_len + -(-(prompt_len - cached_len) // chunk_size) * chunk_size
+    span = max(span, prompt_len + max_new)
     return -(-span // block_size)
 
 
+def max_blocks_bound(prompt_len: int, max_new: int, chunk_size: int,
+                     block_size: int, align: int = 0) -> int:
+    """Upper bound of ``blocks_for_request`` over every admissible
+    ``cached_len`` (static jit geometry must cover the worst case).
+
+    ``align`` is the prefix-hit granularity: when it is a multiple of the
+    chunk size the chunk grid never shifts and the cold bound holds; token
+    granularity (align=1, dense attention) can shift the last chunk to
+    start at prompt_len - 1."""
+    worst = 0 if (align and align % chunk_size == 0) \
+        else max(0, prompt_len - 1)
+    return max(blocks_for_request(prompt_len, max_new, chunk_size,
+                                  block_size),
+               blocks_for_request(prompt_len, max_new, chunk_size,
+                                  block_size, cached_len=worst))
+
+
+def _chain_hashes(tokens: np.ndarray, block_size: int) -> List[int]:
+    """Rolling hash per FULL block: identity covers the whole prefix."""
+    h, out = _HASH_SEED, []
+    for i in range(len(tokens) // block_size):
+        h = hash((h, tuple(map(int, tokens[i * block_size:
+                                           (i + 1) * block_size]))))
+        out.append(h)
+    return out
+
+
 class PagedKVCache:
-    """Fixed-size-block KV pool + per-request block tables + free-list."""
+    """Fixed-size-block KV pool + per-request block tables + free-list +
+    content-addressed prefix cache (refcounts, LRU eviction, COW tails)."""
 
     def __init__(self, model, num_blocks: int, block_size: int):
         kinds = [k for s in model.stacks for k in s.period]
@@ -63,6 +122,21 @@ class PagedKVCache:
         self.data = model.init_cache(self.num_blocks, self.block_size)
         self._free: List[int] = list(range(self.num_blocks))
         self._tables: Dict[int, List[int]] = {}
+        # ---- prefix cache state ----
+        self._ref: Dict[int, int] = {}              # block -> live refcount
+        self._lru: "OrderedDict[int, None]" = OrderedDict()  # evictable
+        self._reg: Dict[int, Tuple] = {}            # block -> registration
+        self._full: Dict[int, int] = {}             # chain hash -> block
+        self._tail: Dict[int, int] = {}             # prefix hash -> block
+        # ---- counters (Engine.stats / ServeResult.prefix) ----
+        self.evictions = 0
+        self.cow_copies = 0
+        self.lookups = 0
+        self.hit_requests = 0
+        self.hit_tokens = 0
+        self.prompt_tokens = 0
+        self._stamp_fn = jax.jit(_stamp_blocks, donate_argnums=0)
+        self._cow_fn = jax.jit(_cow_block, donate_argnums=0)
 
     # ---- free-list bookkeeping ------------------------------------------
     @property
@@ -70,25 +144,81 @@ class PagedKVCache:
         return len(self._free)
 
     @property
-    def num_allocated(self) -> int:
-        return self.num_blocks - len(self._free)
+    def num_evictable(self) -> int:
+        return len(self._lru)
 
-    def can_alloc(self, n: int) -> bool:
-        return n <= len(self._free)
+    @property
+    def num_cached(self) -> int:
+        """Registered (matchable) blocks, live or evictable."""
+        return len(self._reg)
+
+    @property
+    def num_allocated(self) -> int:
+        return self.num_blocks - len(self._free) - len(self._lru)
+
+    def can_alloc(self, n: int, exclude: Sequence[int] = ()) -> bool:
+        """Can ``n`` FRESH blocks be produced (free list + LRU eviction),
+        without evicting any block in ``exclude``?"""
+        lru = len(self._lru) - sum(1 for b in exclude if b in self._lru)
+        return n <= len(self._free) + lru
 
     def alloc(self, rid: int, n: int) -> List[int]:
+        return self.alloc_prefix(rid, n)
+
+    def alloc_prefix(self, rid: int, n_total: int,
+                     shared: Sequence[int] = (),
+                     cow: Optional[Tuple[int, int]] = None) -> List[int]:
+        """Build request ``rid``'s table: ``shared`` (refcount-pinned prefix
+        blocks, read-only, logical indices 0..len(shared)) followed by
+        ``n_total - len(shared)`` fresh blocks.  ``cow = (src, keep)``
+        initialises the first fresh block as a copy of block ``src`` with
+        slots >= ``keep`` invalidated (shared partial tail)."""
         if rid in self._tables:
             raise RuntimeError(f"request {rid} already holds blocks")
-        if n > len(self._free):
+        n_fresh = n_total - len(shared)
+        protect = list(shared) + ([cow[0]] if cow else [])
+        if not self.can_alloc(n_fresh, exclude=protect):
             raise RuntimeError(
-                f"pool exhausted: need {n} blocks, {len(self._free)} free")
-        blocks = [self._free.pop() for _ in range(n)]
-        self._tables[rid] = blocks
-        return blocks
+                f"pool exhausted: need {n_fresh} fresh blocks, "
+                f"{len(self._free)} free + {len(self._lru)} evictable")
+        # pin the shared prefix FIRST so fresh allocation cannot evict it
+        for b in shared:
+            self._pin(b)
+        fresh, stale = [], []
+        for _ in range(n_fresh):
+            b, was_cached = self._take_fresh(protect)
+            if was_cached:
+                stale.append(b)
+            fresh.append(b)
+            self._ref[b] = 1
+        self._stamp(stale)                 # evicted content is stale
+        if cow is not None:
+            src, keep = cow
+            if src not in self._ref and src not in self._lru:
+                raise RuntimeError(f"COW source block {src} not resident")
+            self.data = self._cow_fn(self.data, jnp.asarray(src, jnp.int32),
+                                     jnp.asarray(fresh[0], jnp.int32),
+                                     jnp.asarray(keep, jnp.int32))
+            self.cow_copies += 1
+        self._tables[rid] = list(shared) + fresh
+        return self._tables[rid]
 
     def free(self, rid: int) -> None:
+        """Release a request's blocks.  Registered blocks stay resident on
+        the LRU list (matchable until evicted); the rest are pos=-1-stamped
+        so no stale KV can leak into a later allocation."""
         blocks = self._tables.pop(rid)   # KeyError on double free
-        self._free.extend(blocks)
+        stale = []
+        for b in blocks:
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                del self._ref[b]
+                if b in self._reg:
+                    self._lru[b] = None          # MRU end, content kept
+                else:
+                    stale.append(b)
+                    self._free.append(b)
+        self._stamp(stale)
 
     def table(self, rid: int) -> List[int]:
         return self._tables[rid]
@@ -103,13 +233,172 @@ class PagedKVCache:
             tab[i, :len(blocks)] = blocks
         return tab
 
+    # ---- prefix cache ----------------------------------------------------
+    def match_prefix(self, tokens: np.ndarray,
+                     chain: Optional[List[int]] = None
+                     ) -> Tuple[List[int], Optional[Tuple[int, int]]]:
+        """Longest cached prefix of ``tokens``: (matched full blocks, tail).
+        ``tail = (block, n_common)`` if a registered partial tail extends
+        the matched full-block prefix by ``n_common`` shared tokens.
+        ``chain`` is the precomputed ``_chain_hashes`` of ``tokens`` — the
+        scheduler caches it so a pool-blocked request re-matched every
+        engine step doesn't re-hash its whole prompt each time."""
+        toks = np.asarray(tokens).reshape(-1)
+        bs = self.block_size
+        if chain is None:
+            chain = _chain_hashes(toks, bs)
+        h, fulls = _HASH_SEED, []
+        for h2 in chain:
+            b = self._full.get(h2)
+            if b is None:
+                break
+            fulls.append(b)
+            h = h2
+        tail = None
+        tb = self._tail.get(h)
+        if tb is not None:
+            t_toks = self._reg[tb][2]
+            rem = toks[len(fulls) * bs:]
+            m = 0
+            while m < min(len(rem), len(t_toks)) and \
+                    int(rem[m]) == t_toks[m]:
+                m += 1
+            if m > 0:
+                tail = (tb, m)
+        return fulls, tail
+
+    def register_prefix(self, rid: int, tokens: np.ndarray,
+                        chain: Optional[List[int]] = None) -> None:
+        """Content-address request ``rid``'s prompt blocks (call once the
+        prompt is fully prefilled: full blocks are final; the partial tail's
+        prompt slots are final — later decode tokens land past them)."""
+        toks = np.asarray(tokens).reshape(-1)
+        bs = self.block_size
+        table = self._tables[rid]
+        if chain is None:
+            chain = _chain_hashes(toks, bs)
+        h = _HASH_SEED
+        for i, h2 in enumerate(chain):
+            h = h2
+            b = table[i]
+            if b in self._reg or h in self._full:
+                continue                 # shared / duplicate content
+            self._reg[b] = ("full", h)
+            self._full[h] = b
+        rem = len(toks) % bs
+        if rem:
+            tb = table[len(toks) // bs]
+            if tb not in self._reg and h not in self._tail:
+                self._reg[tb] = ("tail", h,
+                                 tuple(map(int, toks[len(toks) - rem:])))
+                self._tail[h] = tb
+
+    # ---- internals -------------------------------------------------------
+    def _pin(self, b: int) -> None:
+        """Refcount++ a resident block (pulling it off the LRU list)."""
+        if b not in self._ref:
+            if b not in self._lru:
+                raise RuntimeError(f"block {b} not resident, cannot share")
+            del self._lru[b]
+            self._ref[b] = 1
+        else:
+            self._ref[b] += 1
+
+    def _take_fresh(self, protect: Sequence[int]) -> Tuple[int, bool]:
+        """One fresh block: free list first, then LRU eviction (oldest
+        registered block loses its cache entry).  Returns (block, needs
+        stamping) — free-list blocks were stamped when freed."""
+        if self._free:
+            return self._free.pop(), False
+        for b in self._lru:                        # oldest first
+            if b not in protect:
+                del self._lru[b]
+                self._unregister(b)
+                self.evictions += 1
+                return b, True
+        raise RuntimeError("pool exhausted: no evictable block")
+
+    def _unregister(self, b: int) -> None:
+        reg = self._reg.pop(b)
+        index = self._full if reg[0] == "full" else self._tail
+        if index.get(reg[1]) == b:
+            del index[reg[1]]
+
+    def _stamp(self, blocks: List[int]) -> None:
+        """pos=-1-stamp ``blocks`` on device: recycled blocks must read as
+        empty (a donor's stale positions would pass the validity masks).
+        The id vector is padded to the next power of two (not the pool
+        size) so per-free device work is O(freed blocks) while the jit
+        cache stays bounded to log2(num_blocks) shape variants."""
+        if not blocks:
+            return
+        n = 1
+        while n < len(blocks):
+            n *= 2
+        ids = np.full((min(n, self.num_blocks),), self.num_blocks, np.int32)
+        ids[:len(blocks)] = blocks                 # rest drop out of range
+        self.data = self._stamp_fn(self.data, jnp.asarray(ids))
+
     def check_invariants(self) -> None:
-        """No block leaked, none double-allocated, none double-freed."""
-        allocated = [b for t in self._tables.values() for b in t]
-        assert len(set(allocated)) == len(allocated), "block double-allocated"
-        assert len(set(self._free)) == len(self._free), "block double-freed"
-        assert sorted(allocated + self._free) == list(range(self.num_blocks)), \
+        """No block leaked, double-allocated, double-freed, or in two of
+        {allocated, free, LRU}; refcounts match table membership; the hash
+        indices and registrations agree."""
+        refs: Dict[int, int] = {}
+        for t in self._tables.values():
+            assert len(set(t)) == len(t), "block twice in one table"
+            for b in t:
+                refs[b] = refs.get(b, 0) + 1
+        assert refs == self._ref, "refcounts out of sync with tables"
+        held = set(refs)
+        free, lru = set(self._free), set(self._lru)
+        assert len(self._free) == len(free), "block double-freed"
+        assert not (held & free), "allocated block on the free list"
+        assert not (held & lru), "allocated block on the LRU list"
+        assert not (free & lru), "block both free and evictable"
+        assert sorted(held | free | lru) == list(range(self.num_blocks)), \
             "block leaked or invented"
+        for h, b in self._full.items():
+            assert self._reg.get(b, (None, None))[:2] == ("full", h)
+        for h, b in self._tail.items():
+            r = self._reg.get(b)
+            assert r is not None and r[0] == "tail" and r[1] == h
+        for b in self._reg:
+            assert b in held or b in lru, "registered block recycled"
+
+
+# ---------------------------------------------------------------------------
+# pure device helpers (jitted once per pool, donated data)
+# ---------------------------------------------------------------------------
+
+def _stamp_blocks(data, ids):
+    """Set pos = -1 across blocks ``ids`` (padded with out-of-range ids,
+    which drop).  Only integer leaves carry positions; KV payloads are left
+    in place — the position masks make them unreadable."""
+    def s(leaf):
+        if leaf.ndim < 3 or not jnp.issubdtype(leaf.dtype, jnp.integer):
+            return leaf
+        upd = jnp.full((leaf.shape[0], ids.shape[0]) + leaf.shape[2:],
+                       -1, leaf.dtype)
+        return leaf.at[:, ids].set(upd, mode="drop")
+
+    return jax.tree.map(s, data)
+
+
+def _cow_block(data, src, dst, keep):
+    """Copy block ``src`` into ``dst`` (copy-on-write of a shared partial
+    tail), invalidating slots >= ``keep``: those hold the donor's private
+    suffix/decode KV, which the sharer must not see."""
+    def c(leaf):
+        if leaf.ndim < 3:
+            return leaf
+        row = jnp.take(leaf, src, axis=1)          # (R, block_size, ...)
+        if jnp.issubdtype(leaf.dtype, jnp.integer):
+            slot = jnp.arange(leaf.shape[2], dtype=jnp.int32)
+            valid = (slot < keep).reshape((1, -1) + (1,) * (row.ndim - 2))
+            row = jnp.where(valid, row, -1)
+        return leaf.at[:, dst].set(row)
+
+    return jax.tree.map(c, data)
 
 
 # ---------------------------------------------------------------------------
@@ -143,7 +432,9 @@ def scatter(data, gathered, table, touched, num_blocks: int,
 
     ``touched`` (b, max_nb) bool limits the write to blocks the step
     actually modified; untouched and null (-1) table entries are mapped out
-    of range and dropped."""
+    of range and dropped.  Prefix-shared blocks are safe behind this mask:
+    a sharer's writes start at its own prefill offset, so its touched
+    window never covers the shared prefix."""
     b, nb = table.shape
     idx = jnp.where((table >= 0) & touched, table, num_blocks).reshape(-1)
 

@@ -34,6 +34,8 @@ class Request:
     # ---- runtime state (scheduler-owned) ----
     status: str = WAITING
     n_prefilled: int = 0            # prompt tokens consumed so far
+    cached_len: int = 0             # prompt tokens served from the prefix
+                                    # cache at admission (never recomputed)
     out: List[int] = field(default_factory=list)   # generated tokens
     ttft_s: Optional[float] = None
     done_s: Optional[float] = None

@@ -5,43 +5,64 @@ Policy, per engine step:
   1. ``admit``: WAITING requests move to PREFILL in FCFS order while (a) a
      batch slot is free (active requests < ``max_decode_batch``) and (b)
      the pool can reserve their blocks.  Reservation is conservative —
-     ceil((padded_prompt + max_new) / block_size) blocks up front — so a
-     running request can never OOM mid-flight (no preemption needed).
+     ceil((padded_prefill_span + max_new) / block_size) blocks up front —
+     so a running request can never OOM mid-flight (no preemption needed).
      Head-of-line blocking is deliberate: FCFS keeps TTFT fair.
+     With prefix caching on, admission first matches the request's longest
+     cached prefix (full blocks + COW tail, floored to ``prefix_align``),
+     pins the shared blocks into its table and admits it with only the
+     uncached suffix as prefill work (``n_prefilled`` starts at the hit
+     length; the per-request ``chunk_start`` plumbing does the rest).
   2. ``pack_prefill``: up to ``max_prefill_tokens`` worth of pending prompt
      chunks, one B_CP chunk per request (chunks of one request are
      sequential — its next chunk needs this one's KV).
   3. ``pack_decode``: ALL active decode requests (bounded by admission).
 
-Completion (EOS / stop / length) frees the request's blocks immediately.
+Completion (EOS / stop / length) frees the request's blocks; registered
+prefix blocks stay resident (LRU) until memory pressure.
+
+``prefix_align`` guards exactness: a cache hit replays KV the donor
+computed with chunk boundaries at multiples of B_CP starting from 0.
+Selection-based methods (QUOKA & baselines) score per chunk, so their
+outputs are only reproducible when the sharer's suffix chunks land on the
+same grid — hits must be floored to a chunk multiple.  Dense attention is
+chunking-invariant, so ``full`` can share at token granularity (COW tails).
 The scheduler is pure host-side policy; device work happens in the engine.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.serving import request as rq
-from repro.serving.pool import PagedKVCache, blocks_for_request
+from repro.serving.pool import (PagedKVCache, _chain_hashes,
+                                blocks_for_request)
 
 
 class Scheduler:
     def __init__(self, pool: PagedKVCache, chunk_size: int,
-                 max_prefill_tokens: int, max_decode_batch: int):
+                 max_prefill_tokens: int, max_decode_batch: int,
+                 prefix_cache: bool = False, prefix_align: int = 1):
         assert max_prefill_tokens >= chunk_size, \
             "max_prefill_tokens must fit at least one chunk"
         self.pool = pool
         self.chunk_size = int(chunk_size)
         self.max_prefill_tokens = int(max_prefill_tokens)
         self.max_decode_batch = int(max_decode_batch)
+        self.prefix_cache = bool(prefix_cache)
+        self.prefix_align = max(1, int(prefix_align))
         self.waiting: List[rq.Request] = []
         self.prefilling: List[rq.Request] = []
         self.decoding: List[rq.Request] = []
         self.done: List[rq.Request] = []
+        # rid -> precomputed _chain_hashes of the prompt: admit() re-matches
+        # a pool-blocked head request EVERY engine step, and O(prompt_len)
+        # re-hashing per step would tax every interleaved decode step
+        self._chain: Dict[int, List[int]] = {}
 
     # ------------------------------------------------------------------
-    def blocks_needed(self, r: rq.Request) -> int:
+    def blocks_needed(self, r: rq.Request, cached_len: int = 0) -> int:
         return blocks_for_request(r.prompt_len, r.max_new, self.chunk_size,
-                                  self.pool.block_size)
+                                  self.pool.block_size, cached_len=cached_len)
 
     def add(self, r: rq.Request) -> None:
         n = self.blocks_needed(r)
@@ -54,9 +75,11 @@ class Scheduler:
         # re-served request complete instantly with the previous run's tokens
         r.status = rq.WAITING
         r.n_prefilled = 0
+        r.cached_len = 0
         r.out = []
         r.ttft_s = None
         r.done_s = None
+        self._chain.pop(r.rid, None)       # rid may carry new tokens
         self.waiting.append(r)
 
     def pending(self) -> bool:
@@ -67,14 +90,60 @@ class Scheduler:
         return len(self.prefilling) + len(self.decoding)
 
     # ------------------------------------------------------------------
+    def _match(self, r: rq.Request) -> Tuple[int, List[int],
+                                             Optional[Tuple[int, int]]]:
+        """Longest usable cached prefix of ``r``: (cached_len, shared full
+        blocks, cow) with cached_len floored to ``prefix_align`` and capped
+        at prompt_len - 1 (at least one token must be recomputed to produce
+        the first-token logits)."""
+        chain = self._chain.get(r.rid)
+        if chain is None:
+            chain = self._chain[r.rid] = _chain_hashes(
+                r.tokens, self.pool.block_size)
+        fulls, tail = self.pool.match_prefix(r.tokens, chain=chain)
+        bs = self.pool.block_size
+        matched = len(fulls) * bs + (tail[1] if tail else 0)
+        cached = (min(matched, r.prompt_len - 1)
+                  // self.prefix_align) * self.prefix_align
+        if cached <= 0:
+            return 0, [], None
+        n_shared, keep = divmod(cached, bs)
+        shared = fulls[:n_shared]
+        cow = None
+        if keep:
+            src = fulls[n_shared] if n_shared < len(fulls) else tail[0]
+            cow = (src, keep)
+        return cached, shared, cow
+
     def admit(self) -> List[rq.Request]:
         admitted = []
+        pool = self.pool
         while self.waiting and self.n_active < self.max_decode_batch:
             r = self.waiting[0]
-            n = self.blocks_needed(r)
-            if not self.pool.can_alloc(n):
+            cached, shared, cow = (self._match(r) if self.prefix_cache
+                                   else (0, [], None))
+            n = self.blocks_needed(r, cached_len=cached)
+            protect = shared + ([cow[0]] if cow else [])
+            if cached and not pool.can_alloc(n - len(shared),
+                                             exclude=protect):
+                # a hit can demand MORE of the pool than a cold admit: a
+                # token-granularity hit shifts the chunk grid (up to one
+                # extra block of padding) and its shared/COW-source blocks
+                # are protected from eviction.  Degrade to a cold admit
+                # rather than stalling the FCFS head on a pool the request
+                # fits cold.
+                cached, shared, cow, protect = 0, [], None, []
+                n = self.blocks_needed(r)
+            if not pool.can_alloc(n - len(shared), exclude=protect):
                 break                      # FCFS: no skipping the head
-            self.pool.alloc(r.rid, n)
+            pool.alloc_prefix(r.rid, n, shared, cow)
+            pool.lookups += 1
+            pool.prompt_tokens += r.prompt_len
+            if cached:
+                pool.hit_requests += 1
+                pool.hit_tokens += cached
+            r.cached_len = cached
+            r.n_prefilled = cached         # prefill only the uncached suffix
             r.status = rq.PREFILL
             self.prefilling.append(self.waiting.pop(0))
             admitted.append(r)
@@ -97,6 +166,9 @@ class Scheduler:
                        first_token: Optional[int], now: float) -> None:
         r.n_prefilled += vlen
         if r.n_prefilled >= r.prompt_len:
+            if self.prefix_cache:
+                self.pool.register_prefix(r.rid, r.tokens,
+                                          chain=self._chain.pop(r.rid, None))
             r.status = rq.DECODE
             r.out.append(int(first_token))
             r.ttft_s = now - r.arrival_s
@@ -118,5 +190,5 @@ class Scheduler:
     def _finish(self, r: rq.Request, now: float) -> None:
         r.status = rq.DONE
         r.done_s = now
-        self.pool.free(r.rid)              # eviction: blocks back to the pool
+        self.pool.free(r.rid)      # registered prefix blocks stay resident
         self.done.append(r)

@@ -1,0 +1,329 @@
+"""Prefix caching in the paged KV pool: content-addressed block sharing,
+refcount/LRU invariants, copy-on-write tails, eviction under pressure, the
+freed-block stamping regression (a recycled block must never leak a donor's
+KV), and the parity gate — cache-hit serve() must stay token-identical to
+cold per-request generate() for both full and quoka.
+
+Note on alignment: QUOKA (and every selection baseline) scores per B_CP
+chunk, so serve()-vs-generate() parity only holds when both sides chunk the
+prompt on the same grid — generate() left-pads to a chunk multiple, which
+shifts the grid for ragged prompts once the budget truncates.  quoka parity
+cases therefore use chunk-multiple prompt lengths (as test_scheduler does);
+dense attention is chunking-invariant, so `full` cases go ragged on purpose
+to exercise COW tails.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.serving import request as rq
+from repro.serving.engine import Engine
+from repro.serving.pool import PagedKVCache, blocks_for_request
+from repro.serving.request import make_requests
+from repro.serving.scheduler import Scheduler
+
+KEY = jax.random.PRNGKey(0)
+BS = 16
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_config("granite-3-2b").smoke()
+    model = build_model(cfg)
+    return cfg, model, model.init(KEY)
+
+
+def _pos_leaves(data):
+    return [l for l in jax.tree.leaves(data)
+            if hasattr(l, "ndim") and l.ndim >= 3
+            and jnp.issubdtype(l.dtype, jnp.integer)]
+
+
+def _poison(data, blocks, value=3):
+    """Plant valid-looking positions in ``blocks`` (simulates a donor's
+    leftover KV)."""
+    def f(leaf):
+        if leaf.ndim >= 3 and jnp.issubdtype(leaf.dtype, jnp.integer):
+            for b in blocks:
+                leaf = leaf.at[:, b].set(value)
+        return leaf
+    return jax.tree.map(f, data)
+
+
+# ---------------------------------------------------------------------------
+# stamping regression (pool-reuse bugfix)
+# ---------------------------------------------------------------------------
+
+def test_free_stamps_released_blocks(smoke_model):
+    """A freed block's positions must read as -1 before it can be handed to
+    a new request: stale pos values from a donor that sat at a different
+    logical offset would pass the validity masks and leak the donor's KV
+    into the new request's attention."""
+    _, model, _ = smoke_model
+    pool = PagedKVCache(model, num_blocks=4, block_size=BS)
+    held = pool.alloc(0, 2)
+    pool.data = _poison(pool.data, held)        # donor wrote real positions
+    pool.free(0)
+    reused = pool.alloc(1, 2)
+    assert set(reused) == set(held)             # same physical blocks
+    for leaf in _pos_leaves(pool.data):
+        got = np.asarray(leaf[:, np.asarray(reused)])
+        assert (got == -1).all(), "stale positions leaked through free()"
+
+
+def test_evicted_cached_block_is_stamped(smoke_model):
+    """Registered blocks keep their content on the LRU list — but once
+    evicted into a fresh allocation they must be stamped too."""
+    _, model, _ = smoke_model
+    pool = PagedKVCache(model, num_blocks=2, block_size=BS)
+    toks = np.arange(BS, dtype=np.int32) + 3
+    pool.alloc(0, 1)
+    pool.data = _poison(pool.data, pool.table(0))
+    pool.register_prefix(0, toks)               # block is now content-addressed
+    pool.free(0)
+    assert pool.num_evictable == 1              # resident, still matchable
+    fulls, _ = pool.match_prefix(toks)
+    assert len(fulls) == 1
+    blocks = pool.alloc(1, 2)                   # forces the eviction
+    assert pool.evictions == 1
+    fulls, tail = pool.match_prefix(toks)
+    assert fulls == [] and tail is None         # unregistered on eviction
+    for leaf in _pos_leaves(pool.data):
+        assert (np.asarray(leaf[:, np.asarray(blocks)]) == -1).all()
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# host-side bookkeeping: matching, refcounts, LRU
+# ---------------------------------------------------------------------------
+
+def test_match_prefix_follows_hash_chain(smoke_model):
+    """Block identity covers its whole prefix: two donors sharing block 0
+    but diverging in block 1 must not cross-match."""
+    _, model, _ = smoke_model
+    pool = PagedKVCache(model, num_blocks=8, block_size=BS)
+    base = np.arange(BS, dtype=np.int32) + 3
+    a = np.concatenate([base, np.full(BS, 7, np.int32)])
+    b = np.concatenate([base, np.full(BS, 9, np.int32)])
+    pool.alloc(0, 2)
+    pool.register_prefix(0, a)
+    fulls, _ = pool.match_prefix(a)
+    assert fulls == pool.table(0)
+    fulls_b, _ = pool.match_prefix(b)
+    assert fulls_b == pool.table(0)[:1]         # shared first block only
+    assert pool.match_prefix(np.full(BS, 11, np.int32))[0] == []
+    # a partial query matches nothing at full-block granularity
+    assert pool.match_prefix(a[:BS - 1]) == ([], None)
+    pool.free(0)
+    pool.check_invariants()
+
+
+def test_refcount_invariants_random_hold_free(smoke_model):
+    """Randomized admit/complete/free cycles over a tiny pool with heavily
+    overlapping prompts: refcounts, free list, LRU and the hash indices
+    stay mutually consistent; sharing, COW and eviction all trigger."""
+    _, model, _ = smoke_model
+    pool = PagedKVCache(model, num_blocks=10, block_size=BS)
+    sched = Scheduler(pool, chunk_size=BS, max_prefill_tokens=BS,
+                      max_decode_batch=8, prefix_cache=True, prefix_align=1)
+    rng = np.random.default_rng(0)
+    fams = [rng.integers(3, 100, (3 * BS,)).astype(np.int32)
+            for _ in range(2)]
+    held = {}
+    rid = 0
+    for step in range(300):
+        if held and (rng.random() < 0.5 or not pool.can_alloc(4)):
+            victim = int(rng.choice(list(held)))
+            pool.free(victim)
+            del held[victim]
+        else:
+            fam = fams[int(rng.integers(len(fams)))]
+            plen = int(rng.integers(BS, len(fam)))
+            toks = fam[:plen].copy()
+            r = rq.Request(rid=rid, tokens=toks, max_new=1)
+            cached, shared, cow = sched._match(r)
+            n = blocks_for_request(plen, 1, BS, BS, cached_len=cached)
+            protect = shared + ([cow[0]] if cow else [])
+            if pool.can_alloc(n - len(shared), exclude=protect):
+                pool.alloc_prefix(rid, n, shared, cow)
+                assert cached <= plen - 1
+                pool.register_prefix(rid, toks)
+                held[rid] = True
+                rid += 1
+        pool.check_invariants()
+    assert pool.hit_tokens == 0                 # counters are scheduler-owned
+    assert pool.cow_copies > 0                  # partial tails shared
+    assert pool.evictions > 0                   # pressure reached the LRU
+    for r_ in list(held):
+        pool.free(r_)
+    pool.check_invariants()
+    assert pool.num_free + pool.num_evictable == 10
+
+
+def test_shared_blocks_not_evictable_for_same_request(smoke_model):
+    """A request's fresh-block allocation must never evict the prefix
+    blocks it is about to share (pin-before-alloc ordering)."""
+    _, model, _ = smoke_model
+    pool = PagedKVCache(model, num_blocks=3, block_size=BS)
+    toks = np.arange(2 * BS, dtype=np.int32) + 3
+    pool.alloc(0, 2)
+    pool.register_prefix(0, toks)
+    pool.free(0)                                # both blocks on the LRU
+    fulls, _ = pool.match_prefix(toks)
+    table = pool.alloc_prefix(1, 3, shared=fulls)   # needs 1 fresh of 1 free
+    assert table[:2] == fulls
+    pool.check_invariants()
+    # and when fresh demand exceeds free + non-shared LRU, refuse up front
+    assert not pool.can_alloc(2, exclude=fulls)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: cache-hit serving parity, COW, eviction under pressure
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["full", "quoka"])
+def test_cache_hit_serve_matches_cold_generate(smoke_model, method):
+    """Pass 2 over a warm pool admits every request via a prefix hit and
+    must reproduce per-request generate() token-for-token (chunk-multiple
+    prompts: see module docstring)."""
+    cfg, model, p = smoke_model
+    eng = Engine(model, p, method=method)
+    rng = np.random.default_rng(3)
+    sys_tok = rng.integers(3, cfg.vocab, (48,)).astype(np.int32)
+    prompts = [np.concatenate(
+        [sys_tok, rng.integers(3, cfg.vocab, (16,)).astype(np.int32)])
+        for _ in range(3)]
+    refs = [eng.generate(eng.pad_prompt(pr[None]), 6).tokens[0]
+            for pr in prompts]
+    state = eng.make_serve_state(make_requests(prompts, 6), block_size=BS,
+                                 max_decode_batch=4)
+    cold = eng.serve(make_requests(prompts, 6), state=state)
+    assert all(v == 0 for v in cold.cached_len.values())
+    hot = eng.serve(make_requests(prompts, 6), state=state)
+    assert all(v > 0 for v in hot.cached_len.values())
+    if method != "full":                        # hits stay on the B_CP grid
+        chunk = cfg.quoka.chunk_size
+        assert all(v % chunk == 0 for v in hot.cached_len.values())
+    assert eng.stats["cache_hits"] == 3
+    assert eng.stats["hit_rate"] > 0.5
+    for i, ref in enumerate(refs):
+        np.testing.assert_array_equal(cold.tokens[i], ref)
+        np.testing.assert_array_equal(hot.tokens[i], ref)
+    state.pool.check_invariants()
+
+
+def test_cow_shared_tail_multiturn(smoke_model):
+    """Multi-turn shape: turn 2's prompt extends turn 1's ragged prompt, so
+    the shared prefix ends inside a partially filled block — served via a
+    copy-on-write clone of the donor's tail block (dense attention: hits at
+    token granularity)."""
+    cfg, model, p = smoke_model
+    eng = Engine(model, p, method="full")
+    rng = np.random.default_rng(5)
+    base = rng.integers(3, cfg.vocab, (40,)).astype(np.int32)   # 2.5 blocks
+    turn2 = np.concatenate(
+        [base, rng.integers(3, cfg.vocab, (13,)).astype(np.int32)])
+    ref1 = eng.generate(eng.pad_prompt(base[None]), 4).tokens[0]
+    ref2 = eng.generate(eng.pad_prompt(turn2[None]), 4).tokens[0]
+    state = eng.make_serve_state(make_requests([base, turn2], 4),
+                                 block_size=BS, max_decode_batch=2)
+    r1 = eng.serve(make_requests([base], 4), state=state)
+    np.testing.assert_array_equal(r1.tokens[0], ref1)
+    r2 = eng.serve([rq.Request(rid=9, tokens=turn2, max_new=4)], state=state)
+    assert r2.cached_len[9] == 40               # 2 full blocks + 8-token COW
+    assert eng.stats["cow_copies"] == 1
+    np.testing.assert_array_equal(r2.tokens[9], ref2)
+    # the donor's tail block itself must be unaffected by the sharer
+    r1b = eng.serve(make_requests([base], 4), state=state)
+    assert r1b.cached_len[0] == 39              # capped at prompt_len - 1
+    np.testing.assert_array_equal(r1b.tokens[0], ref1)
+    state.pool.check_invariants()
+
+
+def test_lru_eviction_under_memory_pressure(smoke_model):
+    """A pool too small to retain every trace's blocks evicts oldest-first;
+    serving stays correct and invariant-clean throughout."""
+    cfg, model, p = smoke_model
+    eng = Engine(model, p, method="quoka")
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(3, cfg.vocab, (32,)).astype(np.int32)
+               for _ in range(4)]
+    refs = [eng.generate(eng.pad_prompt(pr[None]), 4).tokens[0]
+            for pr in prompts]
+    state = eng.make_serve_state(make_requests(prompts[:1], 4),
+                                 block_size=BS, num_blocks=4,
+                                 max_decode_batch=2)
+    for i, pr in enumerate(prompts):            # distinct prompts: no hits,
+        res = eng.serve(make_requests([pr], 4), state=state)   # all pressure
+        np.testing.assert_array_equal(res.tokens[0], refs[i])
+        state.pool.check_invariants()
+    assert state.pool.evictions > 0
+    # the newest registered prefix is still matchable, the oldest is gone
+    fulls, _ = state.pool.match_prefix(prompts[-1])
+    assert len(fulls) > 0
+    assert state.pool.match_prefix(prompts[0]) == ([], None)
+
+
+def test_hit_degrades_to_cold_admit_on_tight_pool(smoke_model):
+    """A token-granularity hit can need MORE blocks than a cold admit
+    (shifted chunk grid) while its shared/COW-source blocks are protected
+    from eviction; on a pool sized exactly for the cold request, admission
+    must degrade to a cold admit instead of stalling the FCFS head."""
+    cfg, model, p = smoke_model
+    eng = Engine(model, p, method="full")
+    rng = np.random.default_rng(13)
+    pr = rng.integers(3, cfg.vocab, (32,)).astype(np.int32)
+    ref = eng.generate(eng.pad_prompt(pr[None]), 1).tokens[0]
+    state = eng.make_serve_state(make_requests([pr], 1), block_size=BS,
+                                 num_blocks=3, max_decode_batch=2)
+    eng.serve(make_requests([pr], 1), state=state)
+    res = eng.serve(make_requests([pr], 1), state=state)   # would stall
+    assert res.cached_len[0] == 0                          # degraded
+    np.testing.assert_array_equal(res.tokens[0], ref)
+    state.pool.check_invariants()
+
+
+def test_serve_state_rejects_conflicting_kwargs(smoke_model):
+    cfg, model, p = smoke_model
+    eng = Engine(model, p, method="quoka")
+    rng = np.random.default_rng(15)
+    pr = rng.integers(3, cfg.vocab, (16,)).astype(np.int32)
+    state = eng.make_serve_state(make_requests([pr], 2), block_size=BS,
+                                 max_decode_batch=2)
+    with pytest.raises(ValueError, match="make_serve_state"):
+        eng.serve(make_requests([pr], 2), state=state, prefix_cache=False)
+    with pytest.raises(ValueError, match="make_serve_state"):
+        eng.serve(make_requests([pr], 2), state=state, num_blocks=8)
+    eng.serve(make_requests([pr], 2), state=state)         # clean call OK
+
+
+def test_serve_state_geometry_guard(smoke_model):
+    """Reusing a warm state with a trace that outgrows the compiled
+    geometry must fail loudly, not truncate."""
+    cfg, model, p = smoke_model
+    eng = Engine(model, p, method="quoka")
+    rng = np.random.default_rng(9)
+    small = rng.integers(3, cfg.vocab, (16,)).astype(np.int32)
+    big = rng.integers(3, cfg.vocab, (96,)).astype(np.int32)
+    state = eng.make_serve_state(make_requests([small], 4), block_size=BS,
+                                 max_decode_batch=2)
+    eng.serve(make_requests([small], 4), state=state)
+    with pytest.raises(ValueError, match="fresh state"):
+        eng.serve(make_requests([big], 4), state=state)
+
+
+def test_prefix_cache_off_never_hits(smoke_model):
+    cfg, model, p = smoke_model
+    eng = Engine(model, p, method="quoka")
+    rng = np.random.default_rng(11)
+    pr = rng.integers(3, cfg.vocab, (32,)).astype(np.int32)
+    state = eng.make_serve_state(make_requests([pr], 4), block_size=BS,
+                                 max_decode_batch=2, prefix_cache=False)
+    eng.serve(make_requests([pr], 4), state=state)
+    res = eng.serve(make_requests([pr], 4), state=state)
+    assert res.cached_len[0] == 0
+    assert eng.stats["cache_hits"] == 0
+    assert state.pool.num_cached == 0
