@@ -61,7 +61,7 @@ def _sequential(eng, prompts, arrivals, max_new):
     return generated / wall, np.asarray(ttfts), wall
 
 
-def _prefix_reuse(eng, cfg, *, smoke: bool, seed: int):
+def _prefix_reuse(eng, cfg, *, smoke: bool, seed: int, mesh_label: str):
     """Serve a shared-system-prompt trace twice over one warm pool: pass 1
     prefills cold, pass 2 admits every request via a prefix-cache hit."""
     chunk = cfg.quoka.chunk_size
@@ -93,11 +93,13 @@ def _prefix_reuse(eng, cfg, *, smoke: bool, seed: int):
     emit("serving/prefix_reuse/cold", ttft_cold * 1e6,
          f"ttft={ttft_cold*1e3:.1f}ms", bench="serving_throughput",
          scenario="prefix_reuse", mode="cold", method=eng.method,
+         mesh=mesh_label,
          ttft_mean_s=ttft_cold, tokens_per_s=cold.tokens_per_s,
          n_requests=n_requests, prompt_len=sys_len + sfx_len)
     emit("serving/prefix_reuse/cached", ttft_hot * 1e6,
          f"speedup={speedup:.2f}x", bench="serving_throughput",
          scenario="prefix_reuse", mode="cached", method=eng.method,
+         mesh=mesh_label,
          ttft_mean_s=ttft_hot, tokens_per_s=hot.tokens_per_s,
          ttft_speedup=speedup, hit_rate=eng.stats["hit_rate"],
          evictions=eng.stats["evictions"],
@@ -108,9 +110,23 @@ def _prefix_reuse(eng, cfg, *, smoke: bool, seed: int):
     return speedup
 
 
-def run(*, smoke: bool = False, method: str = "quoka", seed: int = 0):
+def run(*, smoke: bool = False, method: str = "quoka", seed: int = 0,
+        mesh_spec: str = None):
+    """``mesh_spec`` ('data=N,model=M') serves the trace on a device mesh
+    (sharded params/caches/pool — the CI sharded-smoke job runs a 1x2 host
+    mesh); every JSON record carries a ``mesh`` field so
+    check_regression.py baselines (pinned to mesh="none") stay comparable
+    when sharded and unsharded runs land in the same out/ directory."""
     header("serving throughput (continuous batching vs one-at-a-time)")
     mark = json_mark()
+    mesh = None
+    mesh_label = "none"
+    if mesh_spec:
+        from repro.launch.mesh import mesh_from_spec
+        mesh = mesh_from_spec(mesh_spec)
+        mesh_label = mesh_spec
+        print(f"# mesh {dict(mesh.shape)} over {mesh.size} devices",
+              flush=True)
     cfg = get_config("qwen3-4b").smoke(n_layers=2, d_model=128, n_heads=4,
                                        n_kv_heads=2, d_ff=256, vocab=512)
     chunk = 16 if smoke else 32
@@ -129,7 +145,7 @@ def run(*, smoke: bool = False, method: str = "quoka", seed: int = 0):
 
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = Engine(model, params, method=method)
+    eng = Engine(model, params, method=method, mesh=mesh)
     rng = np.random.default_rng(seed)
     prompts, arrivals = _trace(rng, cfg.vocab, n_requests, len_lo, len_hi,
                                rate)
@@ -151,7 +167,8 @@ def run(*, smoke: bool = False, method: str = "quoka", seed: int = 0):
     cont_ttft = np.asarray(sorted(res.ttft_s.values()))
     emit("serving/continuous/tokens_per_s", 1e6 / max(res.tokens_per_s, 1e-9),
          f"tps={res.tokens_per_s:.1f}", bench="serving_throughput",
-         mode="continuous", method=method, tokens_per_s=res.tokens_per_s,
+         mode="continuous", method=method, mesh=mesh_label,
+         tokens_per_s=res.tokens_per_s,
          ttft_p50_s=float(np.percentile(cont_ttft, 50)),
          ttft_p99_s=float(np.percentile(cont_ttft, 99)),
          occupancy=res.occupancy, n_requests=n_requests)
@@ -159,7 +176,8 @@ def run(*, smoke: bool = False, method: str = "quoka", seed: int = 0):
     seq_tps, seq_ttft, _ = _sequential(eng, prompts, arrivals, max_new)
     emit("serving/sequential/tokens_per_s", 1e6 / max(seq_tps, 1e-9),
          f"tps={seq_tps:.1f}", bench="serving_throughput",
-         mode="sequential", method=method, tokens_per_s=seq_tps,
+         mode="sequential", method=method, mesh=mesh_label,
+         tokens_per_s=seq_tps,
          ttft_p50_s=float(np.percentile(seq_ttft, 50)),
          ttft_p99_s=float(np.percentile(seq_ttft, 99)),
          occupancy=1.0 / max_decode_batch, n_requests=n_requests)
@@ -171,7 +189,8 @@ def run(*, smoke: bool = False, method: str = "quoka", seed: int = 0):
           f"p99 {np.percentile(cont_ttft, 99)*1e3:.0f} ms)  vs  "
           f"sequential {seq_tps:.1f} tok/s  ->  {speedup:.2f}x", flush=True)
 
-    prefix_speedup = _prefix_reuse(eng, cfg, smoke=smoke, seed=seed)
+    prefix_speedup = _prefix_reuse(eng, cfg, smoke=smoke, seed=seed,
+                                   mesh_label=mesh_label)
     write_json("serving_throughput", mark)
     return {"continuous_vs_sequential": speedup,
             "prefix_ttft_speedup": prefix_speedup}
@@ -182,8 +201,11 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace for the fast CI tier")
     ap.add_argument("--method", default="quoka")
+    ap.add_argument("--mesh", default=None, metavar="data=N,model=M",
+                    help="serve on a device mesh (CPU: set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count first)")
     args = ap.parse_args()
-    run(smoke=args.smoke, method=args.method)
+    run(smoke=args.smoke, method=args.method, mesh_spec=args.mesh)
 
 
 if __name__ == "__main__":

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from repro.configs.base import QuokaConfig
 from repro.core.attention import NEG_INF
 from repro.models.layers import l2_normalize
+from repro.sharding import ctx as shctx
 
 
 class Selected(NamedTuple):
@@ -41,8 +42,27 @@ class Selected(NamedTuple):
 # stage 1: query subselection
 # ----------------------------------------------------------------------------
 
+def sanitize_queries(q: jax.Array, q_valid: Optional[jax.Array]) -> jax.Array:
+    """Replace invalid query rows with a copy of the row's batch-first VALID
+    query.
+
+    ``q_valid`` (b, t) marks real queries; False rows are padding (ragged
+    tail chunks under continuous batching, left-pad slots of ``pad_prompt``)
+    whose projections come from garbage embeddings.  Overwriting them with a
+    duplicate of a real query makes every later stage safe by construction:
+    a duplicate can never change a max-aggregated score, and downstream
+    masking (``subselect_queries``) keeps duplicates out of the mean/top-k
+    whenever enough real queries exist."""
+    if q_valid is None:
+        return q
+    first = jnp.argmax(q_valid, axis=1)                          # (b,)
+    repl = jnp.take_along_axis(q, first[:, None, None, None], axis=1)
+    return jnp.where(q_valid[:, :, None, None], q, repl)
+
+
 def subselect_queries(q: jax.Array, n_queries: int,
-                      n_kv: Optional[int] = None) -> jax.Array:
+                      n_kv: Optional[int] = None,
+                      q_valid: Optional[jax.Array] = None) -> jax.Array:
     """Keep the ``n_queries`` queries with lowest CosSim to the mean query.
 
     q: (b, t, h, d)  ->  (b, n_queries, h, d).
@@ -58,15 +78,28 @@ def subselect_queries(q: jax.Array, n_queries: int,
     the same token — the premise of §3.3's pre-aggregation), so the group-mean
     score preserves exactly the queries pre-aggregation can represent.
     Without ``n_kv`` (or with n_kv == h) selection is per-head as before.
+
+    ``q_valid`` (b, t) bool masks ragged-tail padding: invalid rows are
+    excluded from the mean query AND ranked last by top-k, so garbage
+    embeddings cannot skew the chunk statistics (callers should first run
+    ``sanitize_queries`` so any invalid row that IS kept — fewer valid
+    queries than ``n_queries`` — is a harmless duplicate of a real one).
     """
     b, t, h, d = q.shape
     if t <= n_queries:
         return q
     qf = q.astype(jnp.float32)
-    mq = jnp.mean(qf, axis=1, keepdims=True)                     # (b, 1, h, d)
+    if q_valid is not None:
+        w = q_valid[:, :, None, None].astype(jnp.float32)
+        cnt = jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1.0)
+        mq = jnp.sum(qf * w, axis=1, keepdims=True) / cnt        # (b, 1, h, d)
+    else:
+        mq = jnp.mean(qf, axis=1, keepdims=True)                 # (b, 1, h, d)
     num = jnp.sum(qf * mq, axis=-1)
     den = (jnp.linalg.norm(qf, axis=-1) * jnp.linalg.norm(mq, axis=-1) + 1e-8)
     s_q = -(num / den)                                           # (b, t, h)
+    if q_valid is not None:
+        s_q = jnp.where(q_valid[:, :, None], s_q, -jnp.inf)
     if n_kv is not None and n_kv != h:
         group = h // n_kv
         s_g = s_q.reshape(b, t, n_kv, group).mean(axis=3)        # (b, t, n_kv)
@@ -114,20 +147,19 @@ def quoka_scores(q: jax.Array, k: jax.Array, valid: jax.Array,
     if cfg.scoring == "cosine" and cfg.query_agg == "max":
         from repro.kernels import ops as kops
         backend = kops.resolve_backend(cfg=cfg)
-        if backend != "xla":
-            # fused kernel path: Q̄ stays VMEM-resident, K streamed once
-            return kops.score(qbar, k, valid, backend=backend)
-    # FUSED key normalisation (§Perf A1): scores are divided by per-key norms
-    # instead of materialising a normalised (fp32!) copy of the whole K cache
-    # — K is streamed once, in its storage dtype, by a single einsum.  This
-    # is the XLA twin of the kernels/quoka_score.py in-VMEM normalisation.
-    # NOTE (§Perf A7): scoring is embarrassingly parallel over the KEY axis,
-    # and when n_kv < |model| (granite kv=8 on 16-way TP) it under-shards.
-    # Constraining the score tensor's T axis over `model` was measured at
-    # 60 TB/chip of all-gather — XLA reshards the whole K cache to satisfy
-    # the second layout.  A T-local scoring pass needs the CACHE stored
-    # score-major (or a shard_map with a layout-local kernel); left as
-    # documented future work.
+        # facade path: the fused Pallas kernel (Q̄ VMEM-resident, K streamed
+        # once) or its XLA twin with FUSED key normalisation (§Perf A1 —
+        # scores divided by per-key norms so no normalised fp32 copy of the
+        # K cache is ever materialised).  Tensor-parallel serving runs the
+        # SAME facade per shard inside quoka_select_tp's shard_map below —
+        # that T-local pass is what resolved the old §Perf A7 note: when
+        # n_kv < |model| the (b, n_kv, T) score tensor under-shards, and
+        # constraining its T axis over `model` made XLA reshard the whole K
+        # cache (measured 60 TB/chip of all-gather).  shard_map scores each
+        # key where it lives and merges per-shard top-k candidates instead.
+        return kops.score(qbar, k, valid, backend=backend)
+    # ablation arms ("dot" scoring / "mean" aggregation) are outside the
+    # kernel's fixed semantics and keep the einsum path
     s = jnp.einsum("bnkd,btkd->bknt", qbar.astype(k.dtype), k,
                    preferred_element_type=jnp.float32)           # (b,n_kv,N_Q,T)
     if cfg.scoring == "cosine":
@@ -195,16 +227,130 @@ def prior_context_valid(key_pos: jax.Array, chunk_start) -> jax.Array:
     return (key_pos >= 0) & (key_pos < cs)
 
 
+# ----------------------------------------------------------------------------
+# tensor-parallel T-local selection (shard_map over the `model` axis)
+# ----------------------------------------------------------------------------
+
+def _tp_route(k: jax.Array, cfg: QuokaConfig):
+    """Shard info when the T-local sharded selection path applies.
+
+    The einsum/kernel path already shards well whenever the KV-head axis
+    divides the `model` axis (scores shard over heads).  The failure mode —
+    the old §Perf A7 note — is n_kv < |model| (granite kv=8 on 16-way TP):
+    the score tensor under-shards and any attempt to constrain its T axis
+    resharded the whole K cache.  In exactly that regime the cache's head
+    axis is REPLICATED over `model` (sharding/specs.py drops indivisible
+    axes), so each shard can score a distinct contiguous T-slice of the
+    keys it already holds, locally, and only candidate (score, index)
+    pairs — ``budget`` per shard — cross the interconnect."""
+    if cfg.scoring != "cosine" or cfg.query_agg != "max":
+        return None                        # ablation arms: einsum fallback
+    info = shctx.tp_shard_info()
+    if info is None:
+        return None                        # no mesh policy: einsum fallback
+    mesh, m_ax, _ = info
+    msize = mesh.shape[m_ax]
+    t, n_kv = k.shape[1], k.shape[2]
+    if n_kv % msize == 0:
+        return None                        # heads shard: already layout-local
+    if t % msize != 0:
+        return None                        # ragged key axis: fall back
+    return info
+
+
+def quoka_select_tp(qs: jax.Array, k: jax.Array, v: jax.Array,
+                    key_pos: jax.Array, valid: jax.Array, cfg: QuokaConfig,
+                    budget: int, info) -> Selected:
+    """T-local sharded scoring + selection (resolves the old §Perf A7 note).
+
+    Each `model` shard scores a contiguous ``T/|model|`` slice of the keys
+    through the same ``kernels/ops.score`` facade as the unsharded path,
+    keeps its local top ``min(budget, T/|model|)`` candidates, and the
+    shards merge candidates with one SMALL all-gather (budget (score, idx)
+    pairs per shard — a few KB) instead of resharding the K cache.  The
+    merged top-k is exactly ``select_topk``'s: descending score with ties
+    broken by ascending key index (shard slices are contiguous and
+    ascending, local top-k orders ties by index, and the merge prefers
+    earlier candidate positions), so selection — and therefore decoding —
+    is token-identical to the meshless run."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels import ops as kops
+    from repro.sharding.specs import _axes_size
+
+    mesh, m_ax, b_axes = info
+    msize = mesh.shape[m_ax]
+    b, nq, h, d = qs.shape
+    t, n_kv = k.shape[1], k.shape[2]
+    budget = min(budget, t)
+    tl = t // msize
+    n_cand = min(budget, tl)
+    backend = kops.resolve_backend(cfg=cfg)
+    keep_first = cfg.keep_first
+
+    # pre-aggregation outside the shard_map (cheap, T-independent); the
+    # math matches quoka_scores' cosine branch exactly
+    qn = l2_normalize(qs.astype(jnp.float32))
+    qbar = jnp.mean(qn.reshape(b, nq, n_kv, h // n_kv, d), axis=3)
+
+    b_ax = b_axes if (b_axes and b % _axes_size(mesh, b_axes) == 0) else None
+
+    def body(qbar_l, k_l, v_l, pos_l, valid_l):
+        i = jax.lax.axis_index(m_ax)
+        ks = jax.lax.dynamic_slice_in_dim(k_l, i * tl, tl, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(valid_l, i * tl, tl, axis=1)
+        ps = jax.lax.dynamic_slice_in_dim(pos_l, i * tl, tl, axis=1)
+        s = kops.score(qbar_l, ks, vs, backend=backend)   # (b, n_kv, tl)
+        if keep_first:
+            sink = (ps >= 0) & (ps < keep_first)          # select_topk's rule
+            s = jnp.where(sink[:, None, :] & (s > NEG_INF / 2), jnp.inf, s)
+        cs, ci = jax.lax.top_k(s, n_cand)                 # local candidates
+        ci = ci + i * tl                                  # -> global indices
+        cs = jax.lax.all_gather(cs, m_ax, axis=2, tiled=True)
+        ci = jax.lax.all_gather(ci, m_ax, axis=2, tiled=True)
+        top_s, cpos = jax.lax.top_k(cs, budget)           # merge (replicated)
+        top_i = jnp.take_along_axis(ci, cpos, axis=2)     # (b, n_kv, B)
+        good = top_s > NEG_INF / 2
+        idx_t = top_i.transpose(0, 2, 1)[..., None]       # (b, B, n_kv, 1)
+        k_sel = jnp.take_along_axis(k_l, idx_t, axis=1)
+        v_sel = jnp.take_along_axis(v_l, idx_t, axis=1)
+        pos = jnp.take_along_axis(
+            jnp.broadcast_to(pos_l[:, None, :], (pos_l.shape[0], n_kv, t)),
+            top_i, axis=2)
+        pos = jnp.where(good, pos, -1)
+        return k_sel, v_sel, pos, jnp.where(good, top_i, -1)
+
+    out = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(b_ax, None, None, None), P(b_ax, None, None, None),
+                  P(b_ax, None, None, None), P(b_ax, None), P(b_ax, None)),
+        out_specs=(P(b_ax, None, None, None), P(b_ax, None, None, None),
+                   P(b_ax, None, None), P(b_ax, None, None)),
+        check_rep=False)(qbar, k, v, key_pos, valid)
+    return Selected(*out)
+
+
 def quoka_select(q: jax.Array, k: jax.Array, v: jax.Array,
                  key_pos: jax.Array, chunk_start, cfg: QuokaConfig,
-                 budget: Optional[int] = None) -> Selected:
+                 budget: Optional[int] = None,
+                 q_valid: Optional[jax.Array] = None) -> Selected:
     """Full Algorithm 1: subselect queries, score, topk-gather.
 
     ``chunk_start`` may be traced (scan carry) and scalar or per-row;
-    selection considers only prior-context slots (eq. (2)).
+    selection considers only prior-context slots (eq. (2)).  ``q_valid``
+    (b, t) masks ragged-tail / pad query rows out of the chunk statistics.
+    Under an active tensor-parallel sharding policy (sharding/ctx.py) with
+    an indivisible KV-head axis, scoring+selection runs T-local per shard
+    (``quoka_select_tp``); otherwise the einsum/kernel path below is used.
     """
-    qs = subselect_queries(q, cfg.n_queries, n_kv=k.shape[2])
+    q = sanitize_queries(q, q_valid)
+    qs = subselect_queries(q, cfg.n_queries, n_kv=k.shape[2], q_valid=q_valid)
     valid = prior_context_valid(key_pos, chunk_start)
+    budget = budget or cfg.budget
+    info = _tp_route(k, cfg)
+    if info is not None:
+        return quoka_select_tp(qs, k, v, key_pos, valid, cfg, budget, info)
     scores = quoka_scores(qs, k, valid, cfg)
-    return select_topk(scores, k, v, key_pos, budget or cfg.budget,
+    return select_topk(scores, k, v, key_pos, budget,
                        keep_first=cfg.keep_first)

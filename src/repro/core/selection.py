@@ -176,12 +176,18 @@ def resolve_budget(cfg: QuokaConfig, context_len: int) -> int:
 
 
 def select(method: str, q, k, v, key_pos, chunk_start, cfg: QuokaConfig,
-           budget: Optional[int] = None) -> Selected:
+           budget: Optional[int] = None,
+           q_valid: Optional[jax.Array] = None) -> Selected:
     """Score + topk-gather for any method (``full`` must be handled by the
-    caller — it means 'do not select')."""
+    caller — it means 'do not select').
+
+    ``q_valid`` (b, t) marks real query rows; quoka masks padding /
+    ragged-tail rows out of its chunk statistics (the baselines keep their
+    published scoring definitions and ignore it)."""
     budget = budget or resolve_budget(cfg, k.shape[1])
     if method == "quoka":
-        return quoka_select(q, k, v, key_pos, chunk_start, cfg, budget)
+        return quoka_select(q, k, v, key_pos, chunk_start, cfg, budget,
+                            q_valid=q_valid)
     valid = prior_context_valid(key_pos, chunk_start)
     scores = compute_scores(method, q, k, valid, cfg)
     return select_topk(scores, k, v, key_pos, budget,

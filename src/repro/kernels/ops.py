@@ -100,6 +100,29 @@ def attention(q, k, v, k_valid=None, *, causal: bool = True,
     return out.transpose(0, 2, 1, 3)
 
 
+def _score_xla(qbar, k, valid):
+    """Production XLA twin of the fused scoring kernel, in BTHD layout.
+
+    FUSED key normalisation (§Perf A1): scores are divided by per-key norms
+    instead of materialising a normalised (fp32!) copy of the whole K cache
+    — K is streamed once, in its storage dtype, by a single einsum; the
+    self-dot runs bf16-reads/fp32-accumulate so no converted K copy is ever
+    materialised (an astype(f32) here caused XLA to hoist a full-cache f32
+    conversion across the prefill loop).  This is also the per-shard body
+    of the T-local sharded scoring path (core/quoka.py), which is why it
+    lives behind the facade: every shard of the mesh and the meshless
+    fallback compute byte-identical score elements.
+    """
+    s = jnp.einsum("bnkd,btkd->bknt", qbar.astype(k.dtype), k,
+                   preferred_element_type=jnp.float32)        # (b,n_kv,N_Q,t)
+    sq = jnp.einsum("btkd,btkd->btk", k, k,
+                    preferred_element_type=jnp.float32)
+    inv = jax.lax.rsqrt(sq + 1e-16)                           # (b,t,n_kv)
+    s = s * inv.transpose(0, 2, 1)[:, :, None, :]
+    s = jnp.max(s, axis=2)
+    return jnp.where(valid[:, None, :], s, ref.NEG_INF)
+
+
 def score(qbar, k, valid, *, backend: Optional[str] = None, cfg=None):
     """Fused QUOKA scoring (Algorithm 1 lines 7-10): cosine scores of
     pre-aggregated queries against normalised keys, max over the query axis.
@@ -107,12 +130,17 @@ def score(qbar, k, valid, *, backend: Optional[str] = None, cfg=None):
     qbar: (b, n_q, n_kv, d) pre-aggregated NORMALISED queries (BTHD-ish);
     k: (b, t, n_kv, d) raw keys; valid: (b, t).
     Returns fp32 scores (b, n_kv, t) with NEG_INF on invalid slots.
+
+    The keys may be any contiguous slice of a cache (scoring is local in
+    the key axis), which is what the sharded T-local selection path relies
+    on: each mesh shard scores only the keys it owns through this same
+    entry point.
     """
     be = resolve_backend(backend, cfg)
+    if be == "xla":
+        return _score_xla(qbar, k, valid)
     qt = qbar.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
-    if be == "xla":
-        return ref.quoka_score_ref(qt, kt, valid)
     return quoka_score_bhtd(qt, kt, valid, interpret=(be != "pallas"))
 
 

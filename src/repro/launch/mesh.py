@@ -18,3 +18,36 @@ def make_host_mesh(model: int = 1, data: int = 1):
     """Small mesh for CPU sharding tests (run under
     XLA_FLAGS=--xla_force_host_platform_device_count=N)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def parse_mesh_spec(spec: str):
+    """'data=2,model=4' -> {"data": 2, "model": 4} (axis order preserved)."""
+    out = {}
+    for part in spec.split(","):
+        name, _, size = part.partition("=")
+        name, size = name.strip(), size.strip()
+        if name not in ("pod", "data", "model") or not size.isdigit():
+            raise ValueError(
+                f"bad mesh spec {spec!r}: expected e.g. 'data=2,model=4' "
+                f"with axes from (pod, data, model)")
+        out[name] = int(size)
+    return out
+
+
+def mesh_from_spec(spec: str):
+    """Build a mesh from a '--mesh data=N,model=M' flag value.
+
+    The axis product must equal the visible device count (on CPU, set
+    XLA_FLAGS=--xla_force_host_platform_device_count=N before the process
+    starts — jax locks the device count at first init)."""
+    axes = parse_mesh_spec(spec)
+    n = 1
+    for s in axes.values():
+        n *= s
+    have = len(jax.devices())
+    if n != have:
+        raise ValueError(
+            f"mesh {spec!r} needs {n} devices but {have} are visible "
+            f"(CPU runs: XLA_FLAGS=--xla_force_host_platform_device_count"
+            f"={n})")
+    return jax.make_mesh(tuple(axes.values()), tuple(axes))

@@ -19,6 +19,13 @@ conversations whose every turn re-sends the growing conversation:
     PYTHONPATH=src python -m repro.launch.serve --smoke --continuous \
         --trace multiturn --turns 4 --turn-gap 0.5 [--no-prefix-cache]
 
+Sharded serving (params/caches/paged pool placed per sharding/specs.py,
+QUOKA scoring T-local per shard; token-identical to single-device):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --smoke --continuous \
+        --mesh data=2,model=4
+
 Loads a checkpoint if given (random init otherwise — latency numbers are
 weight-independent) and reports TTFT / throughput / batch occupancy.
 """
@@ -90,12 +97,12 @@ def _build_trace(model, args, rng):
     return prompts, np.asarray(arrivals)
 
 
-def run_continuous(model, params, args):
+def run_continuous(model, params, args, mesh=None):
     """Trace-driven continuous batching with prefix caching (see
     --trace / --no-prefix-cache)."""
     rng = np.random.default_rng(0)
     prompts, arrivals = _build_trace(model, args, rng)
-    eng = Engine(model, params, method=args.method,
+    eng = Engine(model, params, method=args.method, mesh=mesh,
                  sampler=SamplerConfig(temperature=args.temperature))
     kw = dict(block_size=args.block_size, num_blocks=args.num_blocks,
               max_prefill_tokens=args.max_prefill_tokens,
@@ -166,6 +173,13 @@ def main():
                     help="prompt tokens packed per engine step "
                          "(default: 4 * chunk_size)")
     ap.add_argument("--max-decode-batch", type=int, default=8)
+    ap.add_argument("--mesh", default=None, metavar="data=N,model=M",
+                    help="serve sharded on a device mesh: params/caches/"
+                         "paged pool placed per sharding/specs.py, QUOKA "
+                         "scoring T-local per shard.  The axis product "
+                         "must equal the visible device count (CPU: set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N before launch)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -184,8 +198,14 @@ def main():
     if args.ckpt:
         params = ckpt.restore(args.ckpt, params)
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import mesh_from_spec
+        mesh = mesh_from_spec(args.mesh)
+        print(f"# mesh {dict(mesh.shape)} over {mesh.size} devices")
+
     if args.continuous:
-        run_continuous(model, params, args)
+        run_continuous(model, params, args, mesh=mesh)
         return
 
     rng = np.random.default_rng(0)
@@ -193,7 +213,7 @@ def main():
                                     (args.batch, args.prompt_len)), jnp.int32)
     methods = [args.method] + (["full"] if args.compare_dense else [])
     for m in methods:
-        eng = Engine(model, params, method=m,
+        eng = Engine(model, params, method=m, mesh=mesh,
                      sampler=SamplerConfig(temperature=args.temperature))
         eng.generate({"tokens": toks}, 2)          # compile warmup
         r = eng.generate({"tokens": toks}, args.max_new)

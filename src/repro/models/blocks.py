@@ -153,7 +153,7 @@ class AttnBlock:
                                            causal=True, window=self.window)
         else:
             sel = sel_mod.select(method, q, kv.k, kv.v, kv.pos, start,
-                                 ctx["qcfg"])
+                                 ctx["qcfg"], q_valid=pos >= 0)
             att = self._selected_attention(q, k, v, pos, sel,
                                            backend=ctx.get("backend"))
         x = x + linear(p["wo"], att.reshape(b, t, -1))
@@ -352,7 +352,8 @@ class MLABlock:
                                       axis=-1)[:, :, None, :]   # (b,T,1,r+rd)
         q_score = jnp.concatenate([q_abs, q_rope], axis=-1)      # (b,t,h,·)
         sel = sel_mod.select(ctx.get("method", "quoka"), q_score,
-                             latent_keys, latent_keys, lat.pos, start, qc)
+                             latent_keys, latent_keys, lat.pos, start, qc,
+                             q_valid=pos >= 0)
         r = self.cfg.mla.kv_lora_rank
         ckv_sel, kr_sel = sel.k[..., 0, :r], sel.k[..., 0, r:]   # (b,B,·)
         ckv_cat = jnp.concatenate([ckv_sel, ckv_chunk], axis=1)
@@ -536,7 +537,7 @@ class DecCrossBlock:
                                            causal=True)
         else:
             s = sel_mod.select(method, q, kv.k, kv.v, kv.pos, start,
-                               ctx["qcfg"])
+                               ctx["qcfg"], q_valid=pos >= 0)
             att = a._selected_attention(q, k, v, pos, s,
                                         backend=ctx.get("backend"))
         return x + linear(sp["wo"], att.reshape(b, t, -1)), kv

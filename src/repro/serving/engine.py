@@ -34,7 +34,8 @@ class GenerationResult:
     tokens: np.ndarray            # (b, max_new)
     ttft_s: float                 # time to first token (prefill + 1 sample)
     decode_tps: float             # decoded tokens/sec across the batch
-    prompt_len: int
+    prompt_len: int               # TRUE prompt length (pad_prompt padding
+                                  # excluded — per-token TTFT normalisation)
     method: str
     backend: str = "auto"         # resolved kernel backend of this run
 
@@ -84,26 +85,66 @@ class ServeResult:
 class Engine:
     def __init__(self, model: Model, params, *, method: Optional[str] = None,
                  backend: Optional[str] = None,
-                 sampler: SamplerConfig = SamplerConfig()):
+                 sampler: SamplerConfig = SamplerConfig(),
+                 mesh=None):
         """``backend`` overrides the kernel backend for this engine
         ("xla" | "pallas_interpret" | "pallas"); None defers to the env /
-        ``QuokaConfig.backend`` / hardware resolution (kernels/ops.py)."""
+        ``QuokaConfig.backend`` / hardware resolution (kernels/ops.py).
+
+        ``mesh`` (jax.sharding.Mesh with axes from (pod, data, model), see
+        launch/mesh.py) turns on tensor-/data-parallel serving: params are
+        placed via ``sharding/specs.param_specs``, caches (one-shot AND the
+        paged pool) via ``cache_specs``, the jitted step functions are
+        donated + constrained with NamedSharding in/out specs, and QUOKA
+        scoring routes through the T-local shard_map path when the KV-head
+        axis under-shards the `model` axis (core/quoka.py).  Greedy outputs
+        are token-identical to the meshless engine
+        (tests/test_sharded_serving.py)."""
         from repro.kernels import ops as kops
         self.model = model
-        self.params = params
+        self.mesh = mesh
         self.method = method or model.cfg.quoka.method
         self.backend = kops.resolve_backend(backend, model.cfg.quoka)
         self.sampler = sampler
         self.stats: Dict[str, float] = {}   # prefix-cache stats of last serve
+        donate = {}
+        if mesh is not None:
+            from repro.sharding import specs as sh
+            self._param_sh = sh.to_shardings(
+                mesh, sh.param_specs(model.cfg, params, mesh))
+            params = jax.device_put(params, self._param_sh)
+            # donate the cache so XLA updates the sharded buffers in place
+            donate = dict(donate_argnums=(2,))
+        self.params = params
         self._prefill = jax.jit(
             lambda p, batch, cache: model.prefill(p, batch, cache,
                                                   self.method,
-                                                  backend=self.backend))
+                                                  backend=self.backend),
+            **donate)
         self._decode = jax.jit(
             lambda p, tok, pos, cache: model.decode_step(p, tok, pos, cache,
                                                          self.method,
-                                                         backend=self.backend))
+                                                         backend=self.backend),
+            **(dict(donate_argnums=(3,)) if mesh is not None else {}))
         self._cont_fns: Dict = {}
+
+    def _call(self, fn, *args):
+        """Invoke a jitted step.  Under a mesh the sharding policy
+        (sharding/ctx.py) and mesh context are active for the duration —
+        they only matter at trace time (with_sharding_constraint + the
+        quoka shard_map route), and save/restore keeps an outer launcher's
+        policy intact."""
+        if self.mesh is None:
+            return fn(*args)
+        from repro.sharding import ctx as shctx
+        snap = shctx.get_policy()
+        shctx.set_policy(self.mesh, tuple(a for a in ("pod", "data")
+                                          if a in self.mesh.axis_names))
+        try:
+            with self.mesh:
+                return fn(*args)
+        finally:
+            shctx.restore_policy(snap)
 
     # ------------------------------------------------------------------
     # one-shot batch mode
@@ -137,10 +178,16 @@ class Engine:
         extra = t + (model.cfg.frontend.n_tokens
                      if model.cfg.family == "vlm" else 0)
         cache = model.init_cache(b, extra + max_new)
+        if self.mesh is not None:
+            from repro.sharding import specs as sh
+            cache = jax.device_put(cache, sh.to_shardings(
+                self.mesh, sh.cache_specs(model.cfg, cache, self.mesh)))
+            batch = jax.device_put(batch, sh.to_shardings(
+                self.mesh, sh.batch_spec(model.cfg, batch, self.mesh)))
         key = key if key is not None else jax.random.PRNGKey(0)
 
         t0 = time.perf_counter()
-        logits, cache = self._prefill(params, batch, cache)
+        logits, cache = self._call(self._prefill, params, batch, cache)
         tok = sample(logits, key, self.sampler)
         tok.block_until_ready()
         ttft = time.perf_counter() - t0
@@ -153,7 +200,8 @@ class Engine:
         pos = extra
         for i in range(max_new - 1):
             key = jax.random.fold_in(key, i)
-            logits, cache = self._decode(params, tok, jnp.asarray(pos), cache)
+            logits, cache = self._call(self._decode, params, tok,
+                                       jnp.asarray(pos), cache)
             tok = sample(logits, key, self.sampler)
             out.append(tok)
             pos += 1
@@ -162,8 +210,14 @@ class Engine:
         dt = time.perf_counter() - t1
         tps = (b * (max_new - 1)) / dt if max_new > 1 and dt > 0 else 0.0
         tokens_out = np.asarray(jnp.stack(out, axis=1))
+        # true prompt length: ``t`` counts pad_prompt's LEFT padding, which
+        # over-counted per-token TTFT normalisation for ragged prompts —
+        # subtract the batch's pad entry (one pad per batch by construction)
+        pad = batch.get("pad")
+        prompt_len = t - (int(np.asarray(pad).reshape(-1)[0])
+                          if pad is not None else 0)
         return GenerationResult(tokens=tokens_out, ttft_s=ttft,
-                                decode_tps=tps, prompt_len=t,
+                                decode_tps=tps, prompt_len=prompt_len,
                                 method=self.method, backend=self.backend)
 
     # ------------------------------------------------------------------
@@ -178,11 +232,26 @@ class Engine:
             return self._cont_fns[sig]
         from repro.serving import pool as pl
         model, method, backend = self.model, self.method, self.backend
+        mesh = self.mesh
         chunk = model.cfg.quoka.chunk_size
         sampler = self.sampler
 
+        if mesh is not None:
+            from repro.sharding import specs as sh
+
+            def constrain(cache):
+                # keep the gathered linear view on the canonical cache
+                # layout (batch rows over FSDP axes, heads over model) —
+                # without the constraint GSPMD can resolve the view to
+                # replicated and gather/scatter stop being layout-local
+                return sh.constrain_tree(
+                    mesh, cache, sh.cache_specs(model.cfg, cache, mesh))
+        else:
+            def constrain(cache):
+                return cache
+
         def prefill_step(p, data, table, tokens, start, vlen, key):
-            cache = pl.gather(data, table, num_blocks, block_size)
+            cache = constrain(pl.gather(data, table, num_blocks, block_size))
             last_h, cache = model.prefill_chunk(
                 p, {"tokens": tokens}, start, cache, method,
                 backend=backend, valid_len=vlen)
@@ -190,23 +259,47 @@ class Engine:
             tok = sample(logits, key, sampler)
             wrote = jnp.where(vlen > 0, jnp.full_like(vlen, chunk), 0)
             touched = pl.touched_blocks(start, wrote, max_nb, block_size)
-            data = pl.scatter(data, cache, table, touched,
+            data = pl.scatter(data, constrain(cache), table, touched,
                               num_blocks, block_size)
             return data, tok
 
         def decode_step(p, data, table, tokens, pos, live, key):
-            cache = pl.gather(data, table, num_blocks, block_size)
+            cache = constrain(pl.gather(data, table, num_blocks, block_size))
             logits, cache = model.decode_step(p, tokens, pos, cache,
                                               method, backend=backend)
             tok = sample(logits, key, sampler)
             touched = pl.touched_blocks(pos, live, max_nb, block_size)
-            data = pl.scatter(data, cache, table, touched,
+            data = pl.scatter(data, constrain(cache), table, touched,
                               num_blocks, block_size)
             return data, tok
 
-        fns = (jax.jit(prefill_step), jax.jit(decode_step))
+        if mesh is None:
+            fns = (jax.jit(prefill_step), jax.jit(decode_step))
+        else:
+            # donate + pin the pool pytree: the paged cache is by far the
+            # largest resident buffer, and explicit in/out NamedShardings
+            # keep its placement stable across steps instead of letting
+            # propagation re-decide (and possibly reshard) per step fn
+            from repro.sharding import specs as sh
+            data_sh = sh.to_shardings(mesh, sh.cache_specs(
+                model.cfg, self._pool_data_shapes(num_blocks, block_size),
+                mesh, paged=True))
+            rep = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec())
+            host = (rep,) * 4
+            fns = tuple(
+                jax.jit(fn,
+                        in_shardings=(self._param_sh, data_sh) + host + (rep,),
+                        out_shardings=(data_sh, rep),
+                        donate_argnums=(1,))
+                for fn in (prefill_step, decode_step))
         self._cont_fns[sig] = fns
         return fns
+
+    def _pool_data_shapes(self, num_blocks: int, block_size: int):
+        """abstract pytree of the paged pool's device store (for specs)."""
+        return jax.eval_shape(
+            lambda: self.model.init_cache(num_blocks, block_size))
 
     def prefix_align(self) -> int:
         """Prefix-cache hit granularity: selection methods score per chunk,
@@ -237,15 +330,28 @@ class Engine:
         if num_blocks is None:
             num_blocks = max_decode_batch * max_nb    # no contention
         b_p = max(1, max_prefill_tokens // chunk)
-        pool = PagedKVCache(self.model, num_blocks, block_size)
+        b_d = max_decode_batch
+        if self.mesh is not None:
+            # the pool's block axis shards over the FSDP axes — round the
+            # pool and the step-ROW geometries up to the data-parallel
+            # degree so every placement divides evenly instead of
+            # replicating.  The scheduler's admission bound stays the
+            # user's max_decode_batch; only the compiled decode batch
+            # carries (idle) padding rows.
+            from repro.sharding.specs import _axes_size, fsdp_axes
+            dp = _axes_size(self.mesh, fsdp_axes(self.mesh))
+            num_blocks = -(-num_blocks // dp) * dp
+            b_p = -(-b_p // dp) * dp
+            b_d = -(-b_d // dp) * dp
+        pool = PagedKVCache(self.model, num_blocks, block_size,
+                            mesh=self.mesh)
         sched = Scheduler(pool, chunk, max_prefill_tokens, max_decode_batch,
                           prefix_cache=prefix_cache, prefix_align=align)
-        fns = self._continuous_fns(block_size, max_nb, b_p,
-                                   max_decode_batch, num_blocks)
+        fns = self._continuous_fns(block_size, max_nb, b_p, b_d, num_blocks)
         key = key if key is not None else jax.random.PRNGKey(0)
         return ServeState(pool=pool, sched=sched, fns=fns, key=key,
                           chunk=chunk, max_nb=max_nb, b_prefill=b_p,
-                          b_decode=max_decode_batch)
+                          b_decode=b_d)
 
     def step(self, state: ServeState) -> Tuple[int, int]:
         """One engine step: admit, run a mixed chunk-prefill step over up to
@@ -265,8 +371,8 @@ class Engine:
             table = pool.table_array([r.rid for r, *_ in rows],
                                      state.b_prefill, state.max_nb)
             state.key, k1 = jax.random.split(state.key)
-            pool.data, tok = state.fns[0](self.params, pool.data, table,
-                                          tokens, start, vlen, k1)
+            pool.data, tok = self._call(state.fns[0], self.params, pool.data,
+                                        table, tokens, start, vlen, k1)
             tok_np = np.asarray(tok)
             now = state.now
             for i, (r, ch, st, vl) in enumerate(rows):
@@ -283,13 +389,15 @@ class Engine:
             table = pool.table_array([r.rid for r in drows],
                                      state.b_decode, state.max_nb)
             state.key, k2 = jax.random.split(state.key)
-            pool.data, tok = state.fns[1](self.params, pool.data, table,
-                                          tokens, pos, live, k2)
+            pool.data, tok = self._call(state.fns[1], self.params, pool.data,
+                                        table, tokens, pos, live, k2)
             tok_np = np.asarray(tok)
             now = state.now
             for i, r in enumerate(drows):
                 sched.note_decoded(r, int(tok_np[i]), now)
-            state.occupancy.append(len(drows) / state.b_decode)
+            # occupancy over the SCHEDULER's slot bound (the compiled row
+            # batch may carry mesh-rounding padding rows)
+            state.occupancy.append(len(drows) / sched.max_decode_batch)
             state.decode_steps += 1
 
         state.steps += 1
@@ -367,7 +475,13 @@ class Engine:
             while pending and pending[0].arrival_s <= now:
                 sched.add(pending.pop(0))
             if not sched.pending():
-                time.sleep(min(1e-3, max(0.0, pending[0].arrival_s - now)))
+                # idle: sleep until the next arrival instead of re-checking
+                # the queue every 1 ms (a multi-second arrival gap used to
+                # busy-spin ~1000 wakeups/s); the 0.25 s cap bounds clock
+                # drift and keeps shutdown/interrupt latency sane.  Step
+                # counts are untouched — only wakeups that packed nothing
+                # are skipped (tests/test_scheduler.py asserts both).
+                time.sleep(min(0.25, max(0.0, pending[0].arrival_s - now)))
                 continue
             n_pf, n_dec = self.step(state)
             if n_pf == 0 and n_dec == 0 and sched.pending():

@@ -107,7 +107,7 @@ class PagedKVCache:
     """Fixed-size-block KV pool + per-request block tables + free-list +
     content-addressed prefix cache (refcounts, LRU eviction, COW tails)."""
 
-    def __init__(self, model, num_blocks: int, block_size: int):
+    def __init__(self, model, num_blocks: int, block_size: int, mesh=None):
         kinds = [k for s in model.stacks for k in s.period]
         bad = sorted(set(k for k in kinds if k in _UNSUPPORTED_KINDS))
         if bad:
@@ -117,9 +117,19 @@ class PagedKVCache:
         if model.cfg.family == "vlm":
             raise ValueError("paged KV pool does not support VLM frontends")
         self.model = model
+        self.mesh = mesh
         self.num_blocks = int(num_blocks)
         self.block_size = int(block_size)
         self.data = model.init_cache(self.num_blocks, self.block_size)
+        if mesh is not None:
+            # blocks batch-shard over the FSDP axes (pool memory scales
+            # with the data-parallel degree), heads over `model`; the
+            # within-block slot axis is never split (sharding/specs.py
+            # ``paged=True``) — a block is the atomic placement unit
+            from repro.sharding import specs as sh
+            self.data = jax.device_put(self.data, sh.to_shardings(
+                mesh, sh.cache_specs(model.cfg, self.data, mesh,
+                                     paged=True)))
         self._free: List[int] = list(range(self.num_blocks))
         self._tables: Dict[int, List[int]] = {}
         # ---- prefix cache state ----

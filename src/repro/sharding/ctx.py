@@ -34,6 +34,33 @@ def clear_policy():
     set_policy(None, None)
 
 
+def get_policy():
+    """Snapshot of (mesh, batch_axes, model_axis) — pass back to
+    ``restore_policy`` so nested scopes (the serving engine traces under
+    its own mesh) don't clobber an outer launcher's policy."""
+    return _MESH, _BATCH_AXES, _MODEL_AXIS
+
+
+def restore_policy(snap) -> None:
+    global _BATCH_AXES, _MODEL_AXIS, _MESH
+    _MESH, _BATCH_AXES, _MODEL_AXIS = snap
+
+
+def tp_shard_info():
+    """(mesh, model_axis, batch_axes) when a policy with a >1-way model
+    axis is active, else None.
+
+    This is the routing switch for the T-local sharded QUOKA scoring path
+    (core/quoka.py): with tensor parallelism active, scoring work can be
+    split over the ``model`` axis along the KEY axis of the cache instead
+    of under-sharding on the (possibly indivisible) KV-head axis."""
+    if _MESH is None or _MODEL_AXIS is None:
+        return None
+    if _MESH.shape[_MODEL_AXIS] <= 1:
+        return None
+    return _MESH, _MODEL_AXIS, _BATCH_AXES
+
+
 def _axis_size(ax) -> int:
     if _MESH is None or ax is None:
         return 1

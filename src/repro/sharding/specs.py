@@ -156,12 +156,20 @@ def batch_spec(cfg: ModelConfig, batch_tree, mesh: Mesh):
     return jax.tree_util.tree_map_with_path(assign, batch_tree)
 
 
-def cache_specs(cfg: ModelConfig, cache_tree, mesh: Mesh):
+def cache_specs(cfg: ModelConfig, cache_tree, mesh: Mesh,
+                paged: bool = False):
     """KV/state cache shardings.
 
     batch >= |pod·data|: shard batch over FSDP axes, heads over model.
     batch == 1 (long-context): shard the sequence/capacity axis over `data`
-    and heads over `model` (DESIGN.md §6)."""
+    and heads over `model` (DESIGN.md §6).
+
+    ``paged=True`` covers the paged KV pool (serving/pool.py), whose cache
+    is literally ``model.init_cache(num_blocks, block_size)``: the batch
+    axis is the PHYSICAL BLOCK axis (sharded over the FSDP axes, so pool
+    memory scales with the data-parallel degree) and the capacity axis is
+    the within-block slot axis — never sequence-sharded, a block is the
+    atomic placement unit."""
     F = fsdp_axes(mesh)
     M = "model"
 
@@ -172,16 +180,20 @@ def cache_specs(cfg: ModelConfig, cache_tree, mesh: Mesh):
         if nd == 0:
             return P()
         batch_ax = _maybe(mesh, shp[1] if nd > 1 else 0, F)  # after repeats
+
+        def seq_ax(dim):
+            if paged or batch_ax is not None:
+                return None
+            return _maybe(mesh, dim, "data")
+
         # stacked leading repeats axis -> caches look like (R, b, ...)
         if re.search(r"/(k|v)$", s) and nd == 5:       # (R, b, cap, n_kv, hd)
-            seq_ax = None if batch_ax else _maybe(mesh, shp[2], "data")
-            return P(None, batch_ax, seq_ax, _maybe(mesh, shp[3], M), None)
+            return P(None, batch_ax, seq_ax(shp[2]), _maybe(mesh, shp[3], M),
+                     None)
         if re.search(r"/pos$", s) and nd == 3:          # (R, b, cap)
-            seq_ax = None if batch_ax else _maybe(mesh, shp[2], "data")
-            return P(None, batch_ax, seq_ax)
+            return P(None, batch_ax, seq_ax(shp[2]))
         if re.search(r"/(ckv|krope)$", s) and nd == 4:  # (R, b, cap, r)
-            seq_ax = None if batch_ax else _maybe(mesh, shp[2], "data")
-            return P(None, batch_ax, seq_ax, None)
+            return P(None, batch_ax, seq_ax(shp[2]), None)
         if re.search(r"/ssd$", s) and nd == 5:          # (R, b, H, P, N)
             return P(None, batch_ax, _maybe(mesh, shp[2], M), None, None)
         if re.search(r"/conv$", s) and nd == 4:         # (R, b, K-1, ch)
@@ -203,3 +215,15 @@ def cache_specs(cfg: ModelConfig, cache_tree, mesh: Mesh):
 def to_shardings(mesh: Mesh, spec_tree):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain_tree(mesh: Mesh, tree, spec_tree):
+    """``with_sharding_constraint`` every leaf of ``tree`` to its spec —
+    the trace-time twin of ``to_shardings`` for values INSIDE a jitted body
+    (the serving engine constrains its gathered paged-cache views so
+    gather/scatter stay layout-preserving instead of resolving to
+    replicated)."""
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, s)), tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -108,6 +108,37 @@ def test_select_fewer_valid_than_budget():
     assert (np.asarray(sel.pos[0, 0])[valid] < 5).all()
 
 
+def test_ragged_tail_queries_do_not_skew_selection():
+    """Regression: a chunk whose tail rows are padding garbage (pos = -1
+    under continuous batching) must select exactly what the truncated
+    valid-only chunk selects — garbage queries used to enter the mean-query
+    and the cosine top-k and skew every head's scores."""
+    cfg = QuokaConfig(budget=8, n_queries=4, keep_first=0)
+    b, t, h, n_kv, d, cap = 1, 16, 4, 2, 16, 48
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, cap, n_kv, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, cap, n_kv, d))
+    key_pos = jnp.arange(cap, dtype=jnp.int32)[None]
+    vlen = 5
+    q = jax.random.normal(KEY, (b, vlen, h, d))
+    garbage = 50.0 * jax.random.normal(jax.random.fold_in(KEY, 9),
+                                       (b, t - vlen, h, d))
+    q_full = jnp.concatenate([q, garbage], axis=1)
+    q_valid = (jnp.arange(t) < vlen)[None]
+
+    ref = quoka_select(q, k, v, key_pos, jnp.asarray(32), cfg)
+    got = quoka_select(q_full, k, v, key_pos, jnp.asarray(32), cfg,
+                       q_valid=q_valid)
+    np.testing.assert_array_equal(np.asarray(got.idx), np.asarray(ref.idx))
+    np.testing.assert_array_equal(np.asarray(got.pos), np.asarray(ref.pos))
+    np.testing.assert_allclose(np.asarray(got.k), np.asarray(ref.k))
+    # ...and fewer valid queries than N_Q degrades to harmless duplicates
+    # (t <= n_queries early-return keeps sanitized rows only)
+    got2 = quoka_select(q_full[:, :6], k, v, key_pos, jnp.asarray(32),
+                        cfg, q_valid=q_valid[:, :6])
+    ref2 = quoka_select(q_full[:, :5], k, v, key_pos, jnp.asarray(32), cfg)
+    np.testing.assert_array_equal(np.asarray(got2.idx), np.asarray(ref2.idx))
+
+
 def test_theorem1_bound():
     """Numeric check of Theorem 1: for CosSim(k,q*)=beta>0 and
     CosSim(M_Q,k)=alpha<0, CosSim(M_Q,q*) <= 1 + a*b - a^2/2 - b^2/2."""

@@ -126,6 +126,79 @@ def test_requests_can_be_reserved(smoke_model):
     assert len(r2.tokens[0]) == 4
 
 
+def test_ragged_tail_chunk_is_garbage_independent(smoke_model):
+    """The serve path right-pads a partial tail chunk; whatever sits in the
+    pad slots must not leak into the valid rows' output.  Pad KEYS were
+    always masked (pos = -1), but pad QUERIES used to skew the chunk's
+    mean-query/cosine statistics and thereby every row's KV selection."""
+    import jax.numpy as jnp
+    cfg, model, p = smoke_model
+    chunk = cfg.quoka.chunk_size
+    rng = np.random.default_rng(9)
+    toks = rng.integers(3, cfg.vocab, (1, 2 * chunk)).astype(np.int32)
+    tail = rng.integers(3, cfg.vocab, (1, 5)).astype(np.int32)
+    outs = []
+    for fill in (0, 7):                       # two different garbage fills
+        cache = model.init_cache(1, 3 * chunk)
+        for c0 in range(0, 2 * chunk, chunk):
+            _, cache = model.prefill_chunk(
+                p, {"tokens": jnp.asarray(toks[:, c0:c0 + chunk])},
+                jnp.asarray(c0), cache, "quoka")
+        buf = np.full((1, chunk), fill, np.int32)
+        buf[:, :5] = tail
+        last, _ = model.prefill_chunk(
+            p, {"tokens": jnp.asarray(buf)}, jnp.asarray(2 * chunk), cache,
+            "quoka", valid_len=jnp.asarray([5]))
+        outs.append(np.asarray(last))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_idle_wait_sleeps_until_next_arrival(smoke_model, monkeypatch):
+    """A multi-second arrival gap must cost a handful of sleeps, not ~1000
+    1 ms busy-spin wakeups per second — with identical step counts."""
+    import time as time_mod
+
+    import repro.serving.engine as eng_mod
+    cfg, model, p = smoke_model
+    eng = Engine(model, p, method="full")
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(3, cfg.vocab, (16,)).astype(np.int32)
+               for _ in range(2)]
+    kw = dict(block_size=16, max_decode_batch=2)
+    eng.serve(make_requests(prompts, 3), **kw)        # compile warmup
+
+    real_sleep = time_mod.sleep
+    calls = []
+
+    def counting_sleep(s):
+        calls.append(s)
+        real_sleep(min(s, 0.3))
+
+    monkeypatch.setattr(eng_mod.time, "sleep", counting_sleep)
+    res = eng.serve(make_requests(prompts, 3, arrivals=[0.0, 1.0]), **kw)
+    # request 1 finishes well before request 2 arrives (compiled steps are
+    # milliseconds).  Per request: one mixed prefill+first-decode step plus
+    # one more decode step — the long idle sleep must not change that.
+    assert res.steps == 4, res.steps
+    assert res.prefill_steps == 2 and res.decode_steps == 4
+    # the ~1 s idle gap: a few capped sleeps, not ~1000 1 ms wakeups
+    assert 1 <= len(calls) <= 12, len(calls)
+    assert all(len(v) == 3 for v in res.tokens.values())
+
+
+def test_generate_reports_true_prompt_len(smoke_model):
+    """prompt_len used to include pad_prompt's left padding, over-counting
+    per-token TTFT normalisation for ragged prompts."""
+    cfg, model, p = smoke_model
+    eng = Engine(model, p, method="full")
+    rng = np.random.default_rng(17)
+    prompt = rng.integers(3, cfg.vocab, (1, 29)).astype(np.int32)
+    r = eng.generate(eng.pad_prompt(prompt), 2)
+    assert r.prompt_len == 29                 # not the padded 32
+    r2 = eng.generate({"tokens": np.repeat(prompt[:, :16], 1, 0)}, 2)
+    assert r2.prompt_len == 16                # no-pad batches unaffected
+
+
 def test_eos_stops_early_and_frees(smoke_model):
     """EOS eviction: pick the greedy continuation's own first token as the
     EOS id, so the request stops after one decode step."""
