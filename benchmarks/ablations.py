@@ -1,15 +1,23 @@
-"""Paper Tables 9-12 ablations:
+"""Paper Tables 9-12 ablations, plus SelectionPlan knobs:
 
   Table 9   scoring:      cosine vs dot product
   Table 10  aggregation:  max vs mean over the query axis
   Table 11  B_CP sweep:   chunk size robustness
   Table 12  N_Q sweep:    number of sub-selected queries
+  extra     granularity:  token vs block selection plans (core/plan.py)
+  extra     score_proj:   low-rank scoring dim ablation (kernels/ops.score)
+
+``--only <section> [--smoke]`` runs one section (CI runs
+``--only granularity --smoke`` as the selection-granularity gate: block
+plans must stay within a bounded output-error delta of token plans).
 """
 from __future__ import annotations
 
+import argparse
+
 import jax
 
-from benchmarks.common import emit, header
+from benchmarks.common import emit, header, json_mark, write_json
 from repro.configs.base import QuokaConfig
 from repro.core.chunked_prefill import key_recall, output_error
 from repro.data.synthetic import structured_qkv
@@ -25,37 +33,102 @@ def _qkv():
     return QKV
 
 
-def _eval(cfg):
-    q, k, v = _qkv()
+def _eval(cfg, qkv=None):
+    q, k, v = qkv or _qkv()
     return (float(output_error(q, k, v, cfg, "quoka")),
             float(key_recall(q, k, v, cfg, "quoka")))
 
 
-def run():
-    header("ablation: scoring (Table 9)")
-    for scoring in ("cosine", "dot"):
+def _emit(section, label, e, r, **fields):
+    emit(f"ablation_{section}/{label}", 0.0, f"err={e:.4f};recall={r:.3f}",
+         bench="ablations", section=section, output_error=e, key_recall=r,
+         **fields)
+
+
+def granularity(smoke: bool = False):
+    """Token vs block selection plans: whole-block top-k trades a bounded
+    accuracy-proxy delta for contiguous gathers (the smoke variant is the
+    CI ``selection-granularity`` gate)."""
+    header("ablation: selection granularity (SelectionPlan block plans)")
+    if smoke:
+        qkv = structured_qkv(jax.random.PRNGKey(9), 1, 256, 4, 2, 32,
+                             n_needles=12)
+        grids, budget, chunk = (1, 16), 64, 64
+    else:
+        qkv = _qkv()
+        grids, budget, chunk = (1, 8, 16, 32), 128, 128
+    err_tok = None
+    for g in grids:
+        e, r = _eval(QuokaConfig(chunk_size=chunk, budget=budget,
+                                 n_queries=16, keep_first=4, granularity=g),
+                     qkv)
+        _emit("granularity", str(g), e, r, granularity=g, reuse_interval=1)
+        if g == 1:
+            err_tok = e
+    assert e <= err_tok + 0.25, (
+        f"block-granular selection diverged from token-granular: "
+        f"err {e:.4f} vs {err_tok:.4f}")
+
+
+def score_proj(smoke: bool = False):
+    """Low-rank scoring (kernels/ops.score ``proj``): rank vs accuracy."""
+    header("ablation: low-rank scoring dim (score_proj_dim)")
+    dims = (0, 16) if smoke else (0, 8, 16, 24)
+    for r_dim in dims:
         e, r = _eval(QuokaConfig(chunk_size=128, budget=128, n_queries=16,
-                                 keep_first=4, scoring=scoring))
-        emit(f"ablation_scoring/{scoring}", 0.0, f"err={e:.4f};recall={r:.3f}")
+                                 keep_first=4, score_proj_dim=r_dim))
+        _emit("score_proj", str(r_dim), e, r, score_proj_dim=r_dim)
 
-    header("ablation: query aggregation (Table 10)")
-    for agg in ("max", "mean"):
-        e, r = _eval(QuokaConfig(chunk_size=128, budget=128, n_queries=16,
-                                 keep_first=4, query_agg=agg))
-        emit(f"ablation_agg/{agg}", 0.0, f"err={e:.4f};recall={r:.3f}")
 
-    header("ablation: chunk size B_CP (Table 11)")
-    for bcp in (64, 128, 256, 512):
-        e, r = _eval(QuokaConfig(chunk_size=bcp, budget=128,
-                                 n_queries=max(4, bcp // 8), keep_first=4))
-        emit(f"ablation_bcp/{bcp}", 0.0, f"err={e:.4f};recall={r:.3f}")
+def run(only: str = None, smoke: bool = False):
+    mark = json_mark()
+    if only in (None, "scoring"):
+        header("ablation: scoring (Table 9)")
+        for scoring in ("cosine", "dot"):
+            e, r = _eval(QuokaConfig(chunk_size=128, budget=128,
+                                     n_queries=16, keep_first=4,
+                                     scoring=scoring))
+            _emit("scoring", scoring, e, r, scoring=scoring)
 
-    header("ablation: subselected queries N_Q (Table 12)")
-    for nq in (4, 8, 16, 32, 64, 128):
-        e, r = _eval(QuokaConfig(chunk_size=128, budget=128, n_queries=nq,
-                                 keep_first=4))
-        emit(f"ablation_nq/{nq}", 0.0, f"err={e:.4f};recall={r:.3f}")
+    if only in (None, "agg"):
+        header("ablation: query aggregation (Table 10)")
+        for agg in ("max", "mean"):
+            e, r = _eval(QuokaConfig(chunk_size=128, budget=128,
+                                     n_queries=16, keep_first=4,
+                                     query_agg=agg))
+            _emit("agg", agg, e, r, query_agg=agg)
+
+    if only in (None, "bcp"):
+        header("ablation: chunk size B_CP (Table 11)")
+        for bcp in (64, 128, 256, 512):
+            e, r = _eval(QuokaConfig(chunk_size=bcp, budget=128,
+                                     n_queries=max(4, bcp // 8),
+                                     keep_first=4))
+            _emit("bcp", str(bcp), e, r, chunk_size=bcp)
+
+    if only in (None, "nq"):
+        header("ablation: subselected queries N_Q (Table 12)")
+        for nq in (4, 8, 16, 32, 64, 128):
+            e, r = _eval(QuokaConfig(chunk_size=128, budget=128,
+                                     n_queries=nq, keep_first=4))
+            _emit("nq", str(nq), e, r, n_queries=nq)
+
+    if only in (None, "granularity"):
+        granularity(smoke=smoke)
+
+    if only in (None, "score_proj"):
+        score_proj(smoke=smoke)
+
+    write_json("ablations", mark)
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=["scoring", "agg", "bcp", "nq", "granularity",
+                             "score_proj"],
+                    help="run a single ablation section")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for the fast CI tier")
+    args = ap.parse_args()
+    run(only=args.only, smoke=args.smoke)

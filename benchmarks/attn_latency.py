@@ -11,6 +11,7 @@ shortest length (`INTERPRET_MAX_T`).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -24,6 +25,7 @@ from repro.core.chunked_prefill import chunked_sparse_attention
 LENGTHS = (1024, 2048, 4096, 8192)
 METHODS = ("full", "quoka", "sample_attention", "sparq")
 H, NKV, D = 16, 4, 64           # qwen3-4b-ish head geometry (scaled)
+BLOCK_G = 16                    # block-granular selection grid arm
 
 
 def run(lengths=LENGTHS):
@@ -55,7 +57,21 @@ def run(lengths=LENGTHS):
                 derived = f"speedup={base_us/us:.2f}x" if base_us else ""
                 emit(f"attn_latency/T{t}/{backend}/{m}", us, derived,
                      bench="attn_latency", seq_len=t, backend=backend,
-                     method=m)
+                     method=m, granularity=1, reuse_interval=1)
+            if backend == "xla":
+                # block-granular quoka arm (SelectionPlan on a 16-token
+                # grid); the gated baselines pin granularity=1, this arm
+                # tracks the contiguous-gather trajectory
+                cfg_blk = dataclasses.replace(cfg, granularity=BLOCK_G)
+                fn = jax.jit(functools.partial(
+                    chunked_sparse_attention, cfg=cfg_blk, method="quoka",
+                    backend=backend))
+                us = time_fn(fn, q, k, v, warmup=1, iters=iters)
+                derived = f"speedup={base_us/us:.2f}x" if base_us else ""
+                emit(f"attn_latency/T{t}/{backend}/quoka_g{BLOCK_G}", us,
+                     derived, bench="attn_latency", seq_len=t,
+                     backend=backend, method="quoka", granularity=BLOCK_G,
+                     reuse_interval=1)
     write_json("attn_latency", mark)
 
 

@@ -93,13 +93,15 @@ def _prefix_reuse(eng, cfg, *, smoke: bool, seed: int, mesh_label: str):
     emit("serving/prefix_reuse/cold", ttft_cold * 1e6,
          f"ttft={ttft_cold*1e3:.1f}ms", bench="serving_throughput",
          scenario="prefix_reuse", mode="cold", method=eng.method,
-         mesh=mesh_label,
+         mesh=mesh_label, granularity=cfg.quoka.granularity,
+         reuse_interval=cfg.quoka.reuse_interval,
          ttft_mean_s=ttft_cold, tokens_per_s=cold.tokens_per_s,
          n_requests=n_requests, prompt_len=sys_len + sfx_len)
     emit("serving/prefix_reuse/cached", ttft_hot * 1e6,
          f"speedup={speedup:.2f}x", bench="serving_throughput",
          scenario="prefix_reuse", mode="cached", method=eng.method,
-         mesh=mesh_label,
+         mesh=mesh_label, granularity=cfg.quoka.granularity,
+         reuse_interval=cfg.quoka.reuse_interval,
          ttft_mean_s=ttft_hot, tokens_per_s=hot.tokens_per_s,
          ttft_speedup=speedup, hit_rate=eng.stats["hit_rate"],
          evictions=eng.stats["evictions"],
@@ -108,6 +110,41 @@ def _prefix_reuse(eng, cfg, *, smoke: bool, seed: int, mesh_label: str):
           f"{ttft_hot*1e3:.1f} ms = {speedup:.2f}x "
           f"(hit rate {eng.stats['hit_rate']:.2f})", flush=True)
     return speedup
+
+
+def _granularity_scenario(cfg, params, prompts, arrivals, serve_kw, max_new,
+                          *, mesh, mesh_label):
+    """Serving TTFT, token-granular vs block-granular + cross-layer-reuse
+    selection plans (block size == selection grid == B_CP, so a block plan
+    is a sub-view of the paged pool's block table).  Informational: the
+    absolute TTFTs are runner-speed-bound; the gated baselines stay pinned
+    to granularity=1."""
+    chunk = cfg.quoka.chunk_size
+    p50 = {}
+    for label, quoka_kw in (("token_plan", dict(granularity=1,
+                                                reuse_interval=1)),
+                            ("block_plan", dict(granularity=chunk,
+                                                reuse_interval=2))):
+        cfg_v = dataclasses.replace(
+            cfg, quoka=dataclasses.replace(cfg.quoka, **quoka_kw))
+        eng = Engine(build_model(cfg_v), params, method="quoka", mesh=mesh)
+        eng.serve(make_requests(prompts, max_new), **serve_kw)   # compile
+        res = eng.serve(make_requests(prompts, max_new, arrivals=arrivals),
+                        **serve_kw)
+        ttft = np.asarray(sorted(res.ttft_s.values()))
+        p50[label] = float(np.percentile(ttft, 50))
+        emit(f"serving/granularity/{label}", p50[label] * 1e6,
+             f"ttft_p50={p50[label]*1e3:.1f}ms", bench="serving_throughput",
+             scenario="granularity", mode=label, method="quoka",
+             mesh=mesh_label, granularity=quoka_kw["granularity"],
+             reuse_interval=quoka_kw["reuse_interval"],
+             ttft_p50_s=p50[label], tokens_per_s=res.tokens_per_s,
+             n_requests=len(prompts))
+    ratio = p50["block_plan"] / max(p50["token_plan"], 1e-9)
+    print(f"# granularity: token TTFT p50 {p50['token_plan']*1e3:.1f} ms vs "
+          f"block+reuse {p50['block_plan']*1e3:.1f} ms "
+          f"(block/token = {ratio:.2f})", flush=True)
+    return ratio
 
 
 def run(*, smoke: bool = False, method: str = "quoka", seed: int = 0,
@@ -168,6 +205,8 @@ def run(*, smoke: bool = False, method: str = "quoka", seed: int = 0,
     emit("serving/continuous/tokens_per_s", 1e6 / max(res.tokens_per_s, 1e-9),
          f"tps={res.tokens_per_s:.1f}", bench="serving_throughput",
          mode="continuous", method=method, mesh=mesh_label,
+         granularity=cfg.quoka.granularity,
+         reuse_interval=cfg.quoka.reuse_interval,
          tokens_per_s=res.tokens_per_s,
          ttft_p50_s=float(np.percentile(cont_ttft, 50)),
          ttft_p99_s=float(np.percentile(cont_ttft, 99)),
@@ -177,6 +216,8 @@ def run(*, smoke: bool = False, method: str = "quoka", seed: int = 0,
     emit("serving/sequential/tokens_per_s", 1e6 / max(seq_tps, 1e-9),
          f"tps={seq_tps:.1f}", bench="serving_throughput",
          mode="sequential", method=method, mesh=mesh_label,
+         granularity=cfg.quoka.granularity,
+         reuse_interval=cfg.quoka.reuse_interval,
          tokens_per_s=seq_tps,
          ttft_p50_s=float(np.percentile(seq_ttft, 50)),
          ttft_p99_s=float(np.percentile(seq_ttft, 99)),
@@ -191,9 +232,15 @@ def run(*, smoke: bool = False, method: str = "quoka", seed: int = 0,
 
     prefix_speedup = _prefix_reuse(eng, cfg, smoke=smoke, seed=seed,
                                    mesh_label=mesh_label)
+    gran_ratio = None
+    if method == "quoka":
+        gran_ratio = _granularity_scenario(
+            cfg, params, prompts, arrivals, serve_kw, max_new,
+            mesh=mesh, mesh_label=mesh_label)
     write_json("serving_throughput", mark)
     return {"continuous_vs_sequential": speedup,
-            "prefix_ttft_speedup": prefix_speedup}
+            "prefix_ttft_speedup": prefix_speedup,
+            "block_vs_token_ttft_p50": gran_ratio}
 
 
 def main():

@@ -35,6 +35,12 @@ def run(lengths=LENGTHS, *, smoke: bool = False):
                                        budget=256, n_queries=16))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    # block-granular + cross-layer-reuse arm (params are QuokaConfig-free,
+    # so the token-granular init serves both models)
+    blk_g, blk_s = 16, 2
+    model_blk = build_model(dataclasses.replace(
+        cfg, quoka=dataclasses.replace(cfg.quoka, granularity=blk_g,
+                                       reuse_interval=blk_s)))
     rng = np.random.default_rng(0)
     for t in lengths:
         toks = jnp.asarray(rng.integers(3, cfg.vocab, (1, t)), jnp.int32)
@@ -53,7 +59,19 @@ def run(lengths=LENGTHS, *, smoke: bool = False):
                     base = us
                 derived = f"speedup={base/us:.2f}x" if base else ""
                 emit(f"ttft/T{t}/{backend}/{m}", us, derived,
-                     bench="ttft", seq_len=t, backend=backend, method=m)
+                     bench="ttft", seq_len=t, backend=backend, method=m,
+                     granularity=1, reuse_interval=1)
+            if backend == "xla":
+                eng = Engine(model_blk, params, method="quoka",
+                             backend=backend)
+                r = eng.generate({"tokens": toks}, 1)     # warm compile
+                r = eng.generate({"tokens": toks}, 1)
+                us = r.ttft_s * 1e6
+                derived = f"speedup={base/us:.2f}x" if base else ""
+                emit(f"ttft/T{t}/{backend}/quoka_g{blk_g}", us, derived,
+                     bench="ttft", seq_len=t, backend=backend,
+                     method="quoka", granularity=blk_g,
+                     reuse_interval=blk_s)
     write_json("ttft", mark)
 
 

@@ -72,6 +72,22 @@ def collective_bytes(hlo_text: str) -> Dict[str, float]:
     return dict(out)
 
 
+# e.g.  ... gather(...), offset_dims={...}, ..., slice_sizes={1,1,16,4,64}
+# the leading \s excludes "all-gather(" (hyphen, not whitespace, precedes it)
+_GATHER_RE = re.compile(r"\sgather\([^\n]*?slice_sizes=\{([\d,]*)\}")
+
+
+def gather_slice_sizes(hlo_text: str):
+    """slice_sizes of every gather op in the module, in textual order.
+
+    The selection-plan contiguity checks use this to assert that
+    block-granular materialize lowers to gathers whose slices span a whole
+    block extent (granularity tokens per slice) rather than per-token
+    rows."""
+    return [tuple(int(d) for d in m.group(1).split(",") if d)
+            for m in _GATHER_RE.finditer(hlo_text)]
+
+
 def while_trip_counts(hlo_text: str):
     """Best-effort trip counts of while loops (for FLOP sanity checks)."""
     return [int(m.group(1)) for m in

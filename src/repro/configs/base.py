@@ -101,6 +101,23 @@ class QuokaConfig:
     # method-specific knobs for the baselines
     rank: int = 64                 # SparQ / Loki down-projection dim
     lim_layers: int = 2            # LessIsMore: score every k-th layer
+    # ---- SelectionPlan knobs (core/plan.py) ----
+    # selection granularity in tokens: 1 = per-token top-k (the paper's
+    # Algorithm 1), >1 = block-granular CompactAttention-style selection on
+    # a fixed grid (set to the paged pool's block size so materialising a
+    # plan is a contiguous block-table sub-view, serving/pool.py).
+    granularity: int = 1
+    # cross-layer plan reuse: re-score every `reuse_interval` layers and
+    # reuse the previous layer's plan in between (LessIsMore-style depth
+    # amortisation, now first-class).  1 = score every layer (exact).
+    reuse_interval: int = 1
+    # global layer indices that ALWAYS re-score, breaking a reuse run
+    # (periodic correction layers)
+    correction_layers: Tuple[int, ...] = ()
+    # low-rank scoring: project pre-aggregated queries and keys to this
+    # dimension before the fused scoring kernel (Loki-style; a cached
+    # deterministic projection stands in for offline PCA).  0 = full-dim.
+    score_proj_dim: int = 0
 
 
 @dataclass(frozen=True)

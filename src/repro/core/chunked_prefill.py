@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import QuokaConfig
-from repro.core import selection as sel_mod
+from repro.core import plan as plan_mod
 from repro.core.attention import attention_with_positions
 from repro.kernels import ops as kops
 
@@ -67,7 +67,10 @@ def chunked_sparse_attention(q, k, v, cfg: QuokaConfig,
 
     def one_chunk(i, qc, kc, vc, pc):
         start = pc[0, 0]
-        sel = sel_mod.select(method, qc, k, v, pos_all, start, cfg)
+        # the staged plan pipeline (score -> select -> materialize); block
+        # plans include boundary-straddling blocks whole and re-mask their
+        # not-yet-prior tokens inside materialize
+        sel = plan_mod.select(method, qc, k, v, pos_all, start, cfg)
         # [selected budget | chunk] layout: the budget is an unconditioned
         # prefix (every gathered key is strictly before the chunk by
         # construction), the chunk is causal w.r.t. chunk-local indices —
@@ -127,8 +130,8 @@ def key_recall(q, k, v, cfg: QuokaConfig, method: str,
     bcp = min(cfg.chunk_size, t)
     pos_all = jnp.arange(t, dtype=jnp.int32)[None].repeat(b, 0)
     start = t - bcp
-    sel = sel_mod.select(method, q[:, start:], k, v, pos_all,
-                         jnp.asarray(start), cfg)
+    sel = plan_mod.select(method, q[:, start:], k, v, pos_all,
+                          jnp.asarray(start), cfg)
     probs = _oracle_probs(q, k, start, pos_all)
     agg = probs.max(axis=2) if oracle == "max" else probs.sum(axis=2)
     mass = agg.reshape(b, n_kv, h // n_kv, t).max(axis=2) if oracle == "max" \
@@ -152,8 +155,8 @@ def critical_key_recall(q, k, v, cfg: QuokaConfig, method: str,
     bcp = min(cfg.chunk_size, t)
     pos_all = jnp.arange(t, dtype=jnp.int32)[None].repeat(b, 0)
     start = t - bcp
-    sel = sel_mod.select(method, q[:, start:], k, v, pos_all,
-                         jnp.asarray(start), cfg)
+    sel = plan_mod.select(method, q[:, start:], k, v, pos_all,
+                          jnp.asarray(start), cfg)
     probs = _oracle_probs(q, k, start, pos_all)              # (b,h,c,T)
     crit = probs.max(axis=2).reshape(b, n_kv, h // n_kv, t).max(axis=2) >= tau
     sel_mask = jnp.zeros((b, n_kv, t), bool)

@@ -1,4 +1,4 @@
-"""QUOKA — Query-oriented KV selection (paper Algorithm 1).
+"""QUOKA scoring primitives (paper Algorithm 1, stages 1-3).
 
 Three stages, all standard linear algebra (the paper's portability claim):
 
@@ -11,6 +11,12 @@ Three stages, all standard linear algebra (the paper's portability claim):
      as *pre-aggregation*: normalised queries are averaged inside each KV
      group BEFORE the ``Q̄Kᵀ`` matmul (linearity), cutting score cost by
      ``n_q/n_kv`` (paper §3.3, Table 4).
+
+This module produces SCORES (and, on the tensor-parallel fast path,
+top-k plan candidates).  The select + materialize stages live in
+``core/plan.py::SelectionPlan`` — the single selection code path for every
+caller (attention blocks, the standalone chunked-prefill harness, the
+serving engine).
 
 Layouts: q (b, t, n_q_heads, d); k/v caches (b, T, n_kv, d);
 key positions (b, T) int32 with -1 marking empty slots.
@@ -151,13 +157,14 @@ def quoka_scores(q: jax.Array, k: jax.Array, valid: jax.Array,
         # once) or its XLA twin with FUSED key normalisation (§Perf A1 —
         # scores divided by per-key norms so no normalised fp32 copy of the
         # K cache is ever materialised).  Tensor-parallel serving runs the
-        # SAME facade per shard inside quoka_select_tp's shard_map below —
+        # SAME facade per shard inside tp_plan_candidates' shard_map below —
         # that T-local pass is what resolved the old §Perf A7 note: when
         # n_kv < |model| the (b, n_kv, T) score tensor under-shards, and
         # constraining its T axis over `model` made XLA reshard the whole K
         # cache (measured 60 TB/chip of all-gather).  shard_map scores each
         # key where it lives and merges per-shard top-k candidates instead.
-        return kops.score(qbar, k, valid, backend=backend)
+        return kops.score(qbar, k, valid, backend=backend,
+                          proj=score_proj(cfg, d))
     # ablation arms ("dot" scoring / "mean" aggregation) are outside the
     # kernel's fixed semantics and keep the einsum path
     s = jnp.einsum("bnkd,btkd->bknt", qbar.astype(k.dtype), k,
@@ -181,38 +188,14 @@ def quoka_scores(q: jax.Array, k: jax.Array, valid: jax.Array,
     return jnp.where(valid[:, None, :], s_hat, NEG_INF)
 
 
-# ----------------------------------------------------------------------------
-# topk + gather (Algorithm 1 lines 11-12) — shared by every scoring method
-# ----------------------------------------------------------------------------
-
-def select_topk(scores: jax.Array, k: jax.Array, v: jax.Array,
-                key_pos: jax.Array, budget: int, *,
-                keep_first: int = 0) -> Selected:
-    """Gather the ``budget`` best KVs per (batch, kv-head).
-
-    scores: (b, n_kv, T) fp32 with NEG_INF on invalid slots.
-    k, v: (b, T, n_kv, d); key_pos: (b, T).
-    """
-    b, n_kv, t = scores.shape
-    budget = min(budget, t)
-    if keep_first:
-        # sink protection: force-keep the first `keep_first` real tokens
-        sink = (key_pos >= 0) & (key_pos < keep_first)           # (b, T)
-        scores = jnp.where(sink[:, None, :] & (scores > NEG_INF / 2),
-                           jnp.inf, scores)
-    top_s, top_i = jax.lax.top_k(scores, budget)                 # (b, n_kv, B)
-    good = top_s > NEG_INF / 2
-
-    # gather along the TIME axis directly — transposing the K/V caches first
-    # would materialise a full-cache copy per chunk per layer (§Perf A5)
-    idx_t = top_i.transpose(0, 2, 1)[..., None]                  # (b,B,n_kv,1)
-    k_sel = jnp.take_along_axis(k, idx_t, axis=1)                # (b,B,n_kv,d)
-    v_sel = jnp.take_along_axis(v, idx_t, axis=1)
-    pos = jnp.take_along_axis(
-        jnp.broadcast_to(key_pos[:, None, :], scores.shape), top_i, axis=2)
-    pos = jnp.where(good, pos, -1)
-    return Selected(k=k_sel, v=v_sel,
-                    pos=pos, idx=jnp.where(good, top_i, -1))
+def score_proj(cfg: QuokaConfig, d: int):
+    """The cached low-rank scoring projection for ``cfg.score_proj_dim``,
+    or None when the mode is off (or would not reduce the head dim)."""
+    r = getattr(cfg, "score_proj_dim", 0)
+    if not r or r >= d:
+        return None
+    from repro.kernels import ops as kops
+    return kops.score_projection(d, r)
 
 
 def prior_context_valid(key_pos: jax.Array, chunk_start) -> jax.Array:
@@ -255,24 +238,35 @@ def _tp_route(k: jax.Array, cfg: QuokaConfig):
         return None                        # heads shard: already layout-local
     if t % msize != 0:
         return None                        # ragged key axis: fall back
+    g = max(1, cfg.granularity)
+    if (t // msize) % g != 0:
+        return None    # selection grid straddles shard slices: fall back
     return info
 
 
-def quoka_select_tp(qs: jax.Array, k: jax.Array, v: jax.Array,
-                    key_pos: jax.Array, valid: jax.Array, cfg: QuokaConfig,
-                    budget: int, info) -> Selected:
-    """T-local sharded scoring + selection (resolves the old §Perf A7 note).
+def tp_plan_candidates(qs: jax.Array, k: jax.Array, key_pos: jax.Array,
+                       valid: jax.Array, cfg: QuokaConfig, budget: int,
+                       info) -> jax.Array:
+    """T-local sharded scoring + candidate merge (old §Perf A7 note).
 
     Each `model` shard scores a contiguous ``T/|model|`` slice of the keys
     through the same ``kernels/ops.score`` facade as the unsharded path,
-    keeps its local top ``min(budget, T/|model|)`` candidates, and the
-    shards merge candidates with one SMALL all-gather (budget (score, idx)
-    pairs per shard — a few KB) instead of resharding the K cache.  The
-    merged top-k is exactly ``select_topk``'s: descending score with ties
-    broken by ascending key index (shard slices are contiguous and
+    keeps its local top candidates on the selection grid, and the shards
+    merge candidates with one SMALL all-gather ((score, idx) pairs per
+    shard — a few KB) instead of resharding the K cache.  The merged top-k
+    is exactly ``plan.plan_from_scores``'s: descending score with ties
+    broken by ascending key/block index (shard slices are contiguous and
     ascending, local top-k orders ties by index, and the merge prefers
-    earlier candidate positions), so selection — and therefore decoding —
-    is token-identical to the meshless run."""
+    earlier candidate positions), so the returned PLAN INDICES — and
+    therefore decoding — are bit-identical to the meshless run.
+
+    Only indices leave the shard_map: the materialize stage runs outside,
+    on the replicated caches (core/plan.py), so the same contiguous-gather
+    lowering serves the sharded and meshless paths.  Returns the
+    ``SelectionPlan.idx`` payload: (b, n_kv, budget) token slots at
+    granularity 1, (b, budget//g) block ids at granularity g > 1; -1 marks
+    padding.
+    """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
@@ -283,11 +277,14 @@ def quoka_select_tp(qs: jax.Array, k: jax.Array, v: jax.Array,
     msize = mesh.shape[m_ax]
     b, nq, h, d = qs.shape
     t, n_kv = k.shape[1], k.shape[2]
+    g = max(1, cfg.granularity)
     budget = min(budget, t)
+    nb = budget // g                                      # plan slots
     tl = t // msize
-    n_cand = min(budget, tl)
+    n_cand = min(nb, tl // g)                             # per-shard slots
     backend = kops.resolve_backend(cfg=cfg)
     keep_first = cfg.keep_first
+    proj = score_proj(cfg, d)
 
     # pre-aggregation outside the shard_map (cheap, T-independent); the
     # math matches quoka_scores' cosine branch exactly
@@ -296,61 +293,43 @@ def quoka_select_tp(qs: jax.Array, k: jax.Array, v: jax.Array,
 
     b_ax = b_axes if (b_axes and b % _axes_size(mesh, b_axes) == 0) else None
 
-    def body(qbar_l, k_l, v_l, pos_l, valid_l):
+    def body(qbar_l, k_l, pos_l, valid_l):
         i = jax.lax.axis_index(m_ax)
+        bb = k_l.shape[0]
         ks = jax.lax.dynamic_slice_in_dim(k_l, i * tl, tl, axis=1)
         vs = jax.lax.dynamic_slice_in_dim(valid_l, i * tl, tl, axis=1)
         ps = jax.lax.dynamic_slice_in_dim(pos_l, i * tl, tl, axis=1)
-        s = kops.score(qbar_l, ks, vs, backend=backend)   # (b, n_kv, tl)
+        s = kops.score(qbar_l, ks, vs, backend=backend,
+                       proj=proj)                         # (b, n_kv, tl)
         if keep_first:
-            sink = (ps >= 0) & (ps < keep_first)          # select_topk's rule
+            sink = (ps >= 0) & (ps < keep_first)          # plan's sink rule
             s = jnp.where(sink[:, None, :] & (s > NEG_INF / 2), jnp.inf, s)
-        cs, ci = jax.lax.top_k(s, n_cand)                 # local candidates
-        ci = ci + i * tl                                  # -> global indices
-        cs = jax.lax.all_gather(cs, m_ax, axis=2, tiled=True)
-        ci = jax.lax.all_gather(ci, m_ax, axis=2, tiled=True)
-        top_s, cpos = jax.lax.top_k(cs, budget)           # merge (replicated)
-        top_i = jnp.take_along_axis(ci, cpos, axis=2)     # (b, n_kv, B)
+        if g == 1:
+            cs, ci = jax.lax.top_k(s, n_cand)             # local candidates
+            ci = ci + i * tl                              # -> global indices
+            cs = jax.lax.all_gather(cs, m_ax, axis=2, tiled=True)
+            ci = jax.lax.all_gather(ci, m_ax, axis=2, tiled=True)
+            top_s, cpos = jax.lax.top_k(cs, budget)       # merge (replicated)
+            top_i = jnp.take_along_axis(ci, cpos, axis=2)  # (b, n_kv, B)
+            good = top_s > NEG_INF / 2
+            return jnp.where(good, top_i, -1)
+        # block-granular: pool token scores to the local block grid first —
+        # max is associative, so local-max-then-merge equals the meshless
+        # reshape-max over the full key axis, element for element
+        sb = s.reshape(bb, n_kv, tl // g, g).max(axis=3).max(axis=1)
+        cs, ci = jax.lax.top_k(sb, n_cand)                # (b, n_cand)
+        ci = ci + i * (tl // g)                           # -> global block ids
+        cs = jax.lax.all_gather(cs, m_ax, axis=1, tiled=True)
+        ci = jax.lax.all_gather(ci, m_ax, axis=1, tiled=True)
+        top_s, cpos = jax.lax.top_k(cs, nb)
+        top_i = jnp.take_along_axis(ci, cpos, axis=1)     # (b, NB)
         good = top_s > NEG_INF / 2
-        idx_t = top_i.transpose(0, 2, 1)[..., None]       # (b, B, n_kv, 1)
-        k_sel = jnp.take_along_axis(k_l, idx_t, axis=1)
-        v_sel = jnp.take_along_axis(v_l, idx_t, axis=1)
-        pos = jnp.take_along_axis(
-            jnp.broadcast_to(pos_l[:, None, :], (pos_l.shape[0], n_kv, t)),
-            top_i, axis=2)
-        pos = jnp.where(good, pos, -1)
-        return k_sel, v_sel, pos, jnp.where(good, top_i, -1)
+        return jnp.where(good, top_i, -1)
 
-    out = shard_map(
+    out_spec = P(b_ax, None, None) if g == 1 else P(b_ax, None)
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(b_ax, None, None, None), P(b_ax, None, None, None),
-                  P(b_ax, None, None, None), P(b_ax, None), P(b_ax, None)),
-        out_specs=(P(b_ax, None, None, None), P(b_ax, None, None, None),
-                   P(b_ax, None, None), P(b_ax, None, None)),
-        check_rep=False)(qbar, k, v, key_pos, valid)
-    return Selected(*out)
-
-
-def quoka_select(q: jax.Array, k: jax.Array, v: jax.Array,
-                 key_pos: jax.Array, chunk_start, cfg: QuokaConfig,
-                 budget: Optional[int] = None,
-                 q_valid: Optional[jax.Array] = None) -> Selected:
-    """Full Algorithm 1: subselect queries, score, topk-gather.
-
-    ``chunk_start`` may be traced (scan carry) and scalar or per-row;
-    selection considers only prior-context slots (eq. (2)).  ``q_valid``
-    (b, t) masks ragged-tail / pad query rows out of the chunk statistics.
-    Under an active tensor-parallel sharding policy (sharding/ctx.py) with
-    an indivisible KV-head axis, scoring+selection runs T-local per shard
-    (``quoka_select_tp``); otherwise the einsum/kernel path below is used.
-    """
-    q = sanitize_queries(q, q_valid)
-    qs = subselect_queries(q, cfg.n_queries, n_kv=k.shape[2], q_valid=q_valid)
-    valid = prior_context_valid(key_pos, chunk_start)
-    budget = budget or cfg.budget
-    info = _tp_route(k, cfg)
-    if info is not None:
-        return quoka_select_tp(qs, k, v, key_pos, valid, cfg, budget, info)
-    scores = quoka_scores(qs, k, valid, cfg)
-    return select_topk(scores, k, v, key_pos, budget,
-                       keep_first=cfg.keep_first)
+                  P(b_ax, None), P(b_ax, None)),
+        out_specs=out_spec,
+        check_rep=False)(qbar, k, key_pos, valid)

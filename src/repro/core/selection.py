@@ -1,8 +1,9 @@
 """Sparse-attention selection baselines the paper compares against (§4).
 
 All methods share QUOKA's interface: produce fp32 relevance scores
-(b, n_kv, T) over the cached keys, then reuse ``select_topk``.  This keeps
-the comparison honest — only the *scoring policy* differs.
+(b, n_kv, T) over the cached keys; the shared select + materialize stages
+live in ``core/plan.py::SelectionPlan``.  This keeps the comparison honest
+— only the *scoring policy* differs.
 
   sample_attention  Zhu et al. 2024      — uniformly sampled queries, true
                                            softmax logits, mean aggregation
@@ -24,15 +25,12 @@ the comparison honest — only the *scoring policy* differs.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import QuokaConfig
 from repro.core.attention import NEG_INF
-from repro.core.quoka import (Selected, prior_context_valid, quoka_select,
-                              select_topk, quoka_scores, subselect_queries)
+from repro.core.quoka import quoka_scores, subselect_queries
 from repro.models.layers import l2_normalize
 
 METHODS = ("quoka", "sample_attention", "sparq", "loki", "less_is_more",
@@ -86,15 +84,17 @@ def sparq_scores(q, k, valid, cfg: QuokaConfig):
     return _mask(s, valid)
 
 
-def loki_scores(q, k, valid, cfg: QuokaConfig, proj: Optional[jax.Array] = None):
-    """Low-rank projected dot scores.  ``proj`` (d, rank): offline PCA in the
-    original; a fixed random projection stands in here (JL-style)."""
+def loki_scores(q, k, valid, cfg: QuokaConfig):
+    """Low-rank projected dot scores ((d, rank) projection: offline PCA in
+    the original; a fixed random projection stands in here, JL-style).  The
+    projection comes from the process-wide cache shared with the
+    ``score_proj_dim`` plan mode (kernels/ops.py::score_projection) — it
+    used to be rebuilt on every call, once per chunk per layer."""
+    from repro.kernels import ops as kops
     n_kv = k.shape[2]
     d = q.shape[-1]
     r = min(cfg.rank, d)
-    if proj is None:
-        proj = jax.random.normal(jax.random.PRNGKey(7), (d, r),
-                                 jnp.float32) / jnp.sqrt(float(r))
+    proj = kops.score_projection(d, r)
     qg = _group_mean_q(q.astype(jnp.float32), n_kv) @ proj       # (b,t,n_kv,r)
     kl = k.astype(jnp.float32).transpose(0, 2, 1, 3) @ proj      # (b,n_kv,T,r)
     s = jnp.einsum("btkr,bksr->bkts", qg, kl).mean(axis=2)       # mean over q
@@ -166,29 +166,24 @@ def compute_scores(method: str, q, k, valid, cfg: QuokaConfig):
     raise ValueError(f"unknown selection method {method!r}")
 
 
+def floor_to_grid(budget: int, g: int) -> int:
+    """Floor a token budget onto the g-token selection grid (min one
+    block).  Granularity 1 is the identity — legacy budgets unchanged."""
+    if g <= 1:
+        return budget
+    return max(g, budget - budget % g)
+
+
 def resolve_budget(cfg: QuokaConfig, context_len: int) -> int:
     """Effective B_SA: fixed, or a fraction of the (static) context length
-    (paper Table 2 runs B_SA = 25% of the cache)."""
+    (paper Table 2 runs B_SA = 25% of the cache) — GRID-ALIGNED.
+
+    A ratio budget can straddle the selection grid (0.25 * 1000 = 250 on a
+    16-token grid); flooring happens here, in one place, so no caller ever
+    re-rounds (the scheduler/engine/plan all consume this value as-is)."""
     if cfg.budget_ratio is not None:
-        return max(cfg.keep_first + 1,
-                   int(cfg.budget_ratio * context_len))
-    return cfg.budget
-
-
-def select(method: str, q, k, v, key_pos, chunk_start, cfg: QuokaConfig,
-           budget: Optional[int] = None,
-           q_valid: Optional[jax.Array] = None) -> Selected:
-    """Score + topk-gather for any method (``full`` must be handled by the
-    caller — it means 'do not select').
-
-    ``q_valid`` (b, t) marks real query rows; quoka masks padding /
-    ragged-tail rows out of its chunk statistics (the baselines keep their
-    published scoring definitions and ignore it)."""
-    budget = budget or resolve_budget(cfg, k.shape[1])
-    if method == "quoka":
-        return quoka_select(q, k, v, key_pos, chunk_start, cfg, budget,
-                            q_valid=q_valid)
-    valid = prior_context_valid(key_pos, chunk_start)
-    scores = compute_scores(method, q, k, valid, cfg)
-    return select_topk(scores, k, v, key_pos, budget,
-                       keep_first=cfg.keep_first)
+        budget = max(cfg.keep_first + 1,
+                     int(cfg.budget_ratio * context_len))
+    else:
+        budget = cfg.budget
+    return floor_to_grid(budget, max(1, getattr(cfg, "granularity", 1)))

@@ -38,6 +38,7 @@ tests/test_backend_parity.py); layout conversion BTHD <-> BHTD happens here.
 """
 from __future__ import annotations
 
+import functools
 import os
 from typing import Optional
 
@@ -123,7 +124,29 @@ def _score_xla(qbar, k, valid):
     return jnp.where(valid[:, None, :], s, ref.NEG_INF)
 
 
-def score(qbar, k, valid, *, backend: Optional[str] = None, cfg=None):
+@functools.lru_cache(maxsize=32)
+def score_projection(d: int, r: int, seed: int = 7) -> jax.Array:
+    """Cached low-rank scoring projection (d, r).
+
+    A fixed JL-style random projection stands in for the offline PCA of
+    Loki / the `score_proj_dim` ablation (documented in selection.py).  The
+    cache makes the projection a per-process constant: repeated chunks,
+    decode steps and every layer of a stack reuse one array instead of
+    re-deriving it per call (the old ``loki_scores`` rebuilt it on every
+    chunk of every layer).
+
+    The array is materialised under ``ensure_compile_time_eval`` so the
+    cached value is always CONCRETE: the first call may happen inside a
+    jit/scan trace (chunked prefill builds plans inside the scan body),
+    and caching a tracer there would leak it into every later trace.
+    """
+    with jax.ensure_compile_time_eval():
+        return jax.random.normal(jax.random.PRNGKey(seed), (d, r),
+                                 jnp.float32) / jnp.sqrt(float(r))
+
+
+def score(qbar, k, valid, *, backend: Optional[str] = None, cfg=None,
+          proj: Optional[jax.Array] = None):
     """Fused QUOKA scoring (Algorithm 1 lines 7-10): cosine scores of
     pre-aggregated queries against normalised keys, max over the query axis.
 
@@ -131,11 +154,23 @@ def score(qbar, k, valid, *, backend: Optional[str] = None, cfg=None):
     k: (b, t, n_kv, d) raw keys; valid: (b, t).
     Returns fp32 scores (b, n_kv, t) with NEG_INF on invalid slots.
 
+    ``proj`` (d, r) optionally projects BOTH operands to a low-rank space
+    before dispatch (`QuokaConfig.score_proj_dim`): the unchanged kernel
+    then runs at head dim r, normalising the PROJECTED keys, so scores are
+    cosines in the projected space.  Applying the projection here — above
+    the backend split — keeps the xla and pallas branches twins for free.
+
     The keys may be any contiguous slice of a cache (scoring is local in
     the key axis), which is what the sharded T-local selection path relies
     on: each mesh shard scores only the keys it owns through this same
-    entry point.
+    entry point (projecting a slice == slicing the projected cache, so the
+    low-rank mode composes with it exactly).
     """
+    if proj is not None:
+        qbar = (qbar.astype(jnp.float32) @ proj)
+        # project K in its storage dtype — an fp32 projected copy of the
+        # cache would hoist a full-cache conversion (see _score_xla note)
+        k = k @ proj.astype(k.dtype)
     be = resolve_backend(backend, cfg)
     if be == "xla":
         return _score_xla(qbar, k, valid)

@@ -6,18 +6,26 @@ Every block implements the same protocol so the scanned stack
     init(key) -> params
     train(p, x, pos, ctx)              -> (x, aux)          # full-sequence
     cache_spec(batch, cap, dtype)      -> BlockCache
-    apply(p, x, pos, cache, ctx)       -> (x, cache, aux)   # prefill chunk
+    apply(p, x, pos, cache, ctx, plan=None)
+        -> (x, cache, aux, plan)                            # prefill chunk
                                                             # or decode (t=1)
 
+``plan`` is the cross-layer ``core/plan.py::PlanCarry`` (None disables
+reuse: every selecting block builds its own plan).  Selecting blocks
+additionally implement ``plan_carry_shape(cache, t, method, qcfg)`` so the
+stack can decide statically whether a shared carry is geometrically valid.
+
 ``ctx`` (dict):
-    method   selection method name ("full" = dense attention)
-    qcfg     QuokaConfig
-    enc_out  whisper encoder output (b, n_ctx, d) — train/cache-build only
-    shared   params of the zamba2 shared attention block
-    slot     cache write slot of the chunk (traced scalar, or per-row (b,)
-             under continuous batching).  Distinct from ``pos``: pad slots
-             carry pos == -1 while still occupying a cache slot.  Absent ->
-             derived as pos[0, 0] (the legacy unpadded path).
+    method     selection method name ("full" = dense attention)
+    qcfg       QuokaConfig
+    enc_out    whisper encoder output (b, n_ctx, d) — train/cache-build only
+    shared     params of the zamba2 shared attention block
+    slot       cache write slot of the chunk (traced scalar, or per-row (b,)
+               under continuous batching).  Distinct from ``pos``: pad slots
+               carry pos == -1 while still occupying a cache slot.  Absent ->
+               derived as pos[0, 0] (the legacy unpadded path).
+    layer_idx  traced GLOBAL layer index (set by the stack scan when plan
+               reuse is on) — drives the reuse_interval/correction schedule.
 """
 from __future__ import annotations
 
@@ -28,10 +36,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import plan as plan_mod
 from repro.core import selection as sel_mod
 from repro.core.attention import (NEG_INF, attention_with_positions,
                                   dense_attention, position_mask)
-from repro.core.quoka import select_topk, subselect_queries, quoka_scores
 from repro.kernels import ops as kops
 from repro.models import mamba2, moe, rwkv6
 from repro.models.layers import (layernorm, layernorm_init, linear,
@@ -132,12 +140,28 @@ class AttnBlock:
         return BlockCache(kv=kv_init(batch, cap, cfg.n_kv_heads,
                                      cfg.resolved_head_dim, dtype))
 
-    def apply(self, p, x, pos, cache: BlockCache, ctx):
+    def plan_carry_shape(self, cache, t: int, method: str, qcfg):
+        """Static ``SelectionPlan.idx`` shape this block would build for a
+        t-token chunk (from possibly layer-stacked cache leaves), or None
+        when the block never selects (encoder / dense fallback / grid
+        mismatch) — which disables the shared cross-layer carry."""
+        kv = getattr(cache, "kv", None)
+        if self.kind == "enc_attn" or kv is None or kv == ():
+            return None
+        b, cap, n_kv = kv.k.shape[-4], kv.k.shape[-3], kv.k.shape[-2]
+        budget = sel_mod.resolve_budget(qcfg, cap)
+        if method == "full" or cap <= budget + t:
+            return None
+        if plan_mod.grid(qcfg) > 1 and cap % plan_mod.grid(qcfg):
+            return None
+        return plan_mod.plan_idx_shape(qcfg, b, n_kv, cap, budget)
+
+    def apply(self, p, x, pos, cache: BlockCache, ctx, plan=None):
         """Prefill chunk or decode step (t == chunk size or 1)."""
         cfg = self.cfg
         if self.kind == "enc_attn":
             y, aux = self.train(p, x, pos, ctx)
-            return y, cache, aux
+            return y, cache, aux, plan
         b, t, _ = x.shape
         q, k, v = self._qkv(p, self.norm(p["ln1"], x), pos)
         start = _chunk_slot(ctx, pos)
@@ -152,13 +176,17 @@ class AttnBlock:
             att = attention_with_positions(q, kv.k, kv.v, pos, kv.pos,
                                            causal=True, window=self.window)
         else:
-            sel = sel_mod.select(method, q, kv.k, kv.v, kv.pos, start,
-                                 ctx["qcfg"], q_valid=pos >= 0)
+            qcfg = ctx["qcfg"]
+            pln, plan = plan_mod.refresh(
+                plan, ctx.get("layer_idx", 0), qcfg,
+                lambda: plan_mod.build(method, q, kv.k, kv.pos, start, qcfg,
+                                       budget=budget, q_valid=pos >= 0))
+            sel = plan_mod.materialize(pln, kv.k, kv.v, kv.pos, start, qcfg)
             att = self._selected_attention(q, k, v, pos, sel,
                                            backend=ctx.get("backend"))
         x = x + linear(p["wo"], att.reshape(b, t, -1))
         x, aux = self._ffn(p, x, dict(ctx) if ctx else {})
-        return x, cache._replace(kv=kv), aux
+        return x, cache._replace(kv=kv), aux, plan
 
     def _selected_attention(self, q, k_chunk, v_chunk, pos, sel,
                             backend=None):
@@ -313,7 +341,20 @@ class MLABlock:
         return BlockCache(latent=latent_init(batch, cap, m.kv_lora_rank,
                                              m.qk_rope_dim, dtype))
 
-    def apply(self, p, x, pos, cache: BlockCache, ctx):
+    def plan_carry_shape(self, cache, t: int, method: str, qcfg):
+        """Latent selection geometry: one shared 'KV head' (n_kv == 1)."""
+        lat = getattr(cache, "latent", None)
+        if lat is None or lat == ():
+            return None
+        b, cap = lat.ckv.shape[-3], lat.ckv.shape[-2]
+        budget = sel_mod.resolve_budget(qcfg, cap)
+        if method == "full" or cap <= budget + t:
+            return None
+        if plan_mod.grid(qcfg) > 1 and cap % plan_mod.grid(qcfg):
+            return None
+        return plan_mod.plan_idx_shape(qcfg, b, 1, cap, budget)
+
+    def apply(self, p, x, pos, cache: BlockCache, ctx, plan=None):
         cfg, m = self.cfg, self.cfg.mla
         b, t, _ = x.shape
         h = self.norm(p["ln1"], x)
@@ -329,14 +370,14 @@ class MLABlock:
             att = self._absorbed_full(p, q_abs, q_rope, lat.ckv,
                                       lat.krope, pos, lat.pos)
         else:
-            att = self._selected_attention(p, q_abs, q_rope, ckv, kr,
-                                           pos, lat, start, ctx)
+            att, plan = self._selected_attention(p, q_abs, q_rope, ckv, kr,
+                                                 pos, lat, start, ctx, plan)
         x = x + linear(p["wo"], att)
         x, aux = self._ffn(p, x, ctx)
-        return x, cache._replace(latent=lat), aux
+        return x, cache._replace(latent=lat), aux, plan
 
     def _selected_attention(self, p, q_abs, q_rope, ckv_chunk, kr_chunk,
-                            pos, lat: LatentCache, start, ctx):
+                            pos, lat: LatentCache, start, ctx, plan=None):
         """QUOKA (or baseline) on the COMPRESSED latent: one shared 'KV head'
         per token — scoring queries are the absorbed per-head queries, so
         pre-aggregation averages over all n_heads (n_kv == 1).
@@ -348,12 +389,16 @@ class MLABlock:
         columns are sliced off before the W_uv decompression)."""
         b, t = q_abs.shape[:2]
         qc = ctx["qcfg"]
+        method = ctx.get("method", "quoka")
         latent_keys = jnp.concatenate([lat.ckv, lat.krope],
                                       axis=-1)[:, :, None, :]   # (b,T,1,r+rd)
         q_score = jnp.concatenate([q_abs, q_rope], axis=-1)      # (b,t,h,·)
-        sel = sel_mod.select(ctx.get("method", "quoka"), q_score,
-                             latent_keys, latent_keys, lat.pos, start, qc,
-                             q_valid=pos >= 0)
+        pln, plan = plan_mod.refresh(
+            plan, ctx.get("layer_idx", 0), qc,
+            lambda: plan_mod.build(method, q_score, latent_keys, lat.pos,
+                                   start, qc, q_valid=pos >= 0))
+        sel = plan_mod.materialize(pln, latent_keys, latent_keys, lat.pos,
+                                   start, qc)
         r = self.cfg.mla.kv_lora_rank
         ckv_sel, kr_sel = sel.k[..., 0, :r], sel.k[..., 0, r:]   # (b,B,·)
         ckv_cat = jnp.concatenate([ckv_sel, ckv_chunk], axis=1)
@@ -368,7 +413,7 @@ class MLABlock:
                                backend=ctx.get("backend"), cfg=qc)[..., :r]
         out = jnp.einsum("bthr,rhv->bthv", o_lat.astype(jnp.float32),
                          p["wv_b"].astype(jnp.float32))
-        return out.reshape(b, t, -1).astype(q_abs.dtype)
+        return out.reshape(b, t, -1).astype(q_abs.dtype), plan
 
 
 # ============================================================================
@@ -405,16 +450,22 @@ class MambaBlock:
             x, aux = self.shared.train(ctx["shared"], x, pos, ctx)
         return x, aux
 
-    def apply(self, p, x, pos, cache: BlockCache, ctx):
+    def plan_carry_shape(self, cache, t: int, method: str, qcfg):
+        if not self.with_shared:
+            return None
+        return self.shared.plan_carry_shape(cache, t, method, qcfg)
+
+    def apply(self, p, x, pos, cache: BlockCache, ctx, plan=None):
         y, mc = mamba2.mamba_apply(p["mamba"], self.norm(p["ln"], x),
                                    cache.mamba, self.cfg)
         x = x + y
         aux = 0.0
         if self.with_shared:
-            x, kvc, aux = self.shared.apply(ctx["shared"], x, pos,
-                                            BlockCache(kv=cache.kv), ctx)
-            return x, cache._replace(mamba=mc, kv=kvc.kv), aux
-        return x, cache._replace(mamba=mc), aux
+            x, kvc, aux, plan = self.shared.apply(ctx["shared"], x, pos,
+                                                  BlockCache(kv=cache.kv),
+                                                  ctx, plan=plan)
+            return x, cache._replace(mamba=mc, kv=kvc.kv), aux, plan
+        return x, cache._replace(mamba=mc), aux, plan
 
 
 # ============================================================================
@@ -441,9 +492,9 @@ class RWKVBlock:
         y, _, _ = self._run(p, x, cache)
         return y, 0.0
 
-    def apply(self, p, x, pos, cache: BlockCache, ctx):
+    def apply(self, p, x, pos, cache: BlockCache, ctx, plan=None):
         y, new, _ = self._run(p, x, cache.rwkv)
-        return y, cache._replace(rwkv=new), 0.0
+        return y, cache._replace(rwkv=new), 0.0, plan
 
     def _run(self, p, x, rc):
         y, sh_tm, wkv = rwkv6.time_mix(p["tm"], self.norm(p["ln1"], x),
@@ -513,20 +564,21 @@ class DecCrossBlock:
         # self attention sub-block (with its own MLP) then cross attention
         sp = dict(p["self"])
         mlp_p, ln2 = sp["mlp"], sp["ln2"]
-        x, _ = self._self_only(sp, x, pos, ctx, train=True)
+        x, _, _ = self._self_only(sp, x, pos, ctx, train=True)
         cross = self.build_cross(p, ctx["enc_out"])
         x = self._cross(p, x, cross)
         x = x + mlp(mlp_p, self.norm(ln2, x), self.cfg.act)
         return x, 0.0
 
-    def _self_only(self, sp, x, pos, ctx, train: bool, cache=None):
+    def _self_only(self, sp, x, pos, ctx, train: bool, cache=None,
+                   plan=None):
         """Self-attention + residual, WITHOUT the MLP of AttnBlock."""
         a = self.self_attn
         q, k, v = a._qkv(sp, self.norm(sp["ln1"], x), pos)
         b, t = x.shape[:2]
         if train:
             att = attention_with_positions(q, k, v, pos, pos, causal=True)
-            return x + linear(sp["wo"], att.reshape(b, t, -1)), None
+            return x + linear(sp["wo"], att.reshape(b, t, -1)), None, plan
         start = _chunk_slot(ctx, pos)
         kv = kv_write(cache, k, v, start, pos_new=pos)
         method = ctx.get("method", "full")
@@ -536,18 +588,26 @@ class DecCrossBlock:
             att = attention_with_positions(q, kv.k, kv.v, pos, kv.pos,
                                            causal=True)
         else:
-            s = sel_mod.select(method, q, kv.k, kv.v, kv.pos, start,
-                               ctx["qcfg"], q_valid=pos >= 0)
+            qcfg = ctx["qcfg"]
+            pln, plan = plan_mod.refresh(
+                plan, ctx.get("layer_idx", 0), qcfg,
+                lambda: plan_mod.build(method, q, kv.k, kv.pos, start, qcfg,
+                                       budget=budget, q_valid=pos >= 0))
+            s = plan_mod.materialize(pln, kv.k, kv.v, kv.pos, start, qcfg)
             att = a._selected_attention(q, k, v, pos, s,
                                         backend=ctx.get("backend"))
-        return x + linear(sp["wo"], att.reshape(b, t, -1)), kv
+        return x + linear(sp["wo"], att.reshape(b, t, -1)), kv, plan
 
-    def apply(self, p, x, pos, cache: BlockCache, ctx):
+    def plan_carry_shape(self, cache, t: int, method: str, qcfg):
+        return self.self_attn.plan_carry_shape(cache, t, method, qcfg)
+
+    def apply(self, p, x, pos, cache: BlockCache, ctx, plan=None):
         sp = p["self"]
-        x, kv = self._self_only(sp, x, pos, ctx, train=False, cache=cache.kv)
+        x, kv, plan = self._self_only(sp, x, pos, ctx, train=False,
+                                      cache=cache.kv, plan=plan)
         x = self._cross(p, x, cache.cross)
         x = x + mlp(sp["mlp"], self.norm(sp["ln2"], x), self.cfg.act)
-        return x, cache._replace(kv=kv), 0.0
+        return x, cache._replace(kv=kv), 0.0, plan
 
 
 # ============================================================================

@@ -210,8 +210,12 @@ class Model:
     def _apply_stacks(self, p, x, pos, cache: ModelCache, ctx):
         new = []
         aux = jnp.zeros((), jnp.float32)
+        plan = None           # cross-layer SelectionPlan carry (core/plan.py)
+        layer0 = 0            # global layer offset for the reuse schedule
         for s, sp, sc in zip(self.stacks, p["stacks"], cache.stacks):
-            x, nc, a = s.apply(sp, x, pos, sc, ctx)
+            x, nc, a, plan = s.apply(sp, x, pos, sc,
+                                     dict(ctx, layer0=layer0), plan=plan)
+            layer0 += len(s.period) * s.repeats
             new.append(nc)
             aux = aux + a
         return x, cache._replace(stacks=tuple(new)), aux

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import plan as plan_mod
 from repro.models.blocks import make_block
 from repro.sharding import ctx as shctx
 
@@ -70,9 +71,35 @@ class Stack:
                                    params)
         return x, aux
 
-    def apply(self, params: Tuple, x, pos, caches: Tuple, ctx):
+    def _plan_carry0(self, caches: Tuple, t: int, ctx, plan):
+        """The initial cross-layer plan carry, or None when reuse is off.
+
+        Reuse engages only when ``qcfg.reuse_interval > 1`` AND every period
+        position would build the same-shaped plan (uniform geometry): a
+        heterogeneous period (mixed capacities, dense-fallback layers, a
+        non-selecting block) silently disables the carry and every layer
+        builds its own plan — byte-identical to the reuse-off path.  An
+        incoming carry from a previous stack is adopted when its shape
+        matches, so reuse runs span stack boundaries."""
+        qcfg = ctx.get("qcfg") if isinstance(ctx, dict) else None
+        method = ctx.get("method", "full") if isinstance(ctx, dict) else "full"
+        if (qcfg is None or method == "full"
+                or max(1, getattr(qcfg, "reuse_interval", 1)) <= 1):
+            return None
+        shapes = [getattr(blk, "plan_carry_shape", None) and
+                  blk.plan_carry_shape(caches[j], t, method, qcfg)
+                  for j, blk in enumerate(self.blocks)]
+        if shapes[0] is None or any(s != shapes[0] for s in shapes):
+            return None
+        if isinstance(plan, plan_mod.PlanCarry) and plan.idx.shape == shapes[0]:
+            return plan
+        return plan_mod.empty_carry(shapes[0])
+
+    def apply(self, params: Tuple, x, pos, caches: Tuple, ctx, plan=None):
         """Prefill-chunk / decode forward with caches.
-        Returns (x, new_caches, aux).
+        Returns (x, new_caches, aux, plan) — ``plan`` is the cross-layer
+        ``PlanCarry`` threaded through the scan when KV-selection reuse is
+        on (core/plan.py), passed through untouched otherwise.
 
         Caches live in the scan CARRY and are updated through WINDOWED
         dynamic-update-slices (only the rows a chunk actually writes), not
@@ -84,6 +111,9 @@ class Stack:
         t = x.shape[1]
         slot = ctx.get("slot")
         start = pos[0, 0] if slot is None else slot
+        carry0 = self._plan_carry0(caches, t, ctx, plan)
+        layer0 = int(ctx.get("layer0", 0)) if isinstance(ctx, dict) else 0
+        n_period = len(self.blocks)
 
         def write_back(blk, buf_tree, new_slice, idx):
             """Windowed write of one layer's cache updates into the stacked
@@ -144,7 +174,11 @@ class Stack:
             return type(buf_tree)(*out)
 
         def body(carry, xs):
-            h, aux, bufs = carry
+            if carry0 is not None:
+                h, aux, bufs, pc = carry
+            else:
+                h, aux, bufs = carry
+                pc = None
             p_slice, idx = xs
             new_bufs = []
             for j, blk in enumerate(self.blocks):
@@ -152,12 +186,22 @@ class Stack:
                 c_slice = jax.tree.map(
                     lambda l: jax.lax.dynamic_index_in_dim(
                         l, idx, axis=0, keepdims=False), bufs[j])
-                h, c_new, a = blk.apply(p_slice[j], h, pos, c_slice, ctx)
+                cj = ctx if pc is None else \
+                    dict(ctx, layer_idx=layer0 + idx * n_period + j)
+                h, c_new, a, pc = blk.apply(p_slice[j], h, pos, c_slice, cj,
+                                            plan=pc)
                 new_bufs.append(write_back(blk, bufs[j], c_new, idx))
                 aux = aux + jnp.asarray(a, jnp.float32)
-            return (h, aux, tuple(new_bufs)), None
+            out = (h, aux, tuple(new_bufs))
+            return (out + (pc,) if carry0 is not None else out), None
 
         idxs = jnp.arange(self.repeats, dtype=jnp.int32)
-        (x, aux, caches), _ = jax.lax.scan(
-            body, (x, jnp.zeros((), jnp.float32), caches), (params, idxs))
-        return x, caches, aux
+        init = (x, jnp.zeros((), jnp.float32), caches)
+        if carry0 is not None:
+            init = init + (carry0,)
+        out, _ = jax.lax.scan(body, init, (params, idxs))
+        if carry0 is not None:
+            x, aux, caches, plan = out
+        else:
+            x, aux, caches = out
+        return x, caches, aux, plan

@@ -177,7 +177,14 @@ class Engine:
         b, t = tokens.shape
         extra = t + (model.cfg.frontend.n_tokens
                      if model.cfg.family == "vlm" else 0)
-        cache = model.init_cache(b, extra + max_new)
+        cap = extra + max_new
+        g = model.cfg.quoka.granularity
+        if self.method != "full" and g > 1:
+            # block-granular plans need the cache view on the selection
+            # grid (core/plan.py); padding slots read pos = -1 and their
+            # blocks score NEG_INF, so rounding up is free
+            cap = -(-cap // g) * g
+        cache = model.init_cache(b, cap)
         if self.mesh is not None:
             from repro.sharding import specs as sh
             cache = jax.device_put(cache, sh.to_shardings(
@@ -322,6 +329,14 @@ class Engine:
         from repro.serving.scheduler import Scheduler
         chunk = self.model.cfg.quoka.chunk_size
         block_size = block_size or chunk
+        g = self.model.cfg.quoka.granularity
+        if self.method != "full" and g > 1 and block_size % g != 0:
+            raise ValueError(
+                f"block_size={block_size} must be a multiple of the "
+                f"selection granularity {g}: block-granular plans "
+                f"materialize as whole-block sub-views of the paged pool "
+                f"(serving/pool.py::gather_blocks), which needs the plan "
+                f"grid to divide the pool grid")
         max_prefill_tokens = max_prefill_tokens or 4 * chunk
         align = self.prefix_align() if prefix_cache else chunk
         max_nb = max(max_blocks_bound(r.prompt_len, r.max_new, chunk,

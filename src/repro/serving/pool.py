@@ -436,6 +436,23 @@ def gather(data, table, num_blocks: int, block_size: int):
     return jax.tree.map(g, data)
 
 
+def gather_blocks(data, table, block_ids, num_blocks: int, block_size: int):
+    """Materialise only SELECTED blocks of each request: a sub-view of
+    ``gather`` driven by per-request logical block indices (b, nb_sel)
+    int32, -1 = padding.
+
+    This is the paged backing of core/plan.py's block-granular
+    materialize: a plan built on the pool grid (granularity divides
+    block_size) names whole logical blocks, so re-indexing the block
+    TABLE — not the tokens — keeps the physical gather whole-block
+    contiguous (one dynamic slice of ``block_size`` rows per selected
+    block, never a per-token gather).  Padding ids read as pos = -1 /
+    zeros, same as ``gather``."""
+    sub = jnp.take_along_axis(table, jnp.maximum(block_ids, 0), axis=1)
+    sub = jnp.where(block_ids >= 0, sub, -1)
+    return gather(data, sub, num_blocks, block_size)
+
+
 def scatter(data, gathered, table, touched, num_blocks: int,
             block_size: int):
     """Write gathered views back into the pool.

@@ -5,7 +5,8 @@ import numpy as np
 
 from repro.configs.base import QuokaConfig
 from repro.core.chunked_prefill import chunked_sparse_attention, output_error
-from repro.core.selection import resolve_budget, select
+from repro.core.plan import select
+from repro.core.selection import resolve_budget
 from repro.data.synthetic import structured_qkv
 
 KEY = jax.random.PRNGKey(0)
@@ -16,6 +17,21 @@ def test_resolve_budget():
     assert resolve_budget(QuokaConfig(budget_ratio=0.25), 1000) == 250
     assert resolve_budget(QuokaConfig(budget_ratio=0.001, keep_first=4),
                           100) == 5     # floor at keep_first + 1
+
+
+def test_resolve_budget_floors_to_selection_grid():
+    """Regression: a ratio budget straddling the B_CP/pool block grid must
+    be floored to it HERE — callers (scheduler/engine/plan) no longer
+    round."""
+    # 0.25 * 1000 = 250 straddles a 16-token grid -> 240
+    assert resolve_budget(QuokaConfig(budget_ratio=0.25, granularity=16),
+                          1000) == 240
+    # fixed budgets floor too, but never below one block
+    assert resolve_budget(QuokaConfig(budget=77, granularity=16), 1000) == 64
+    assert resolve_budget(QuokaConfig(budget=7, granularity=16), 1000) == 16
+    # granularity 1 is the identity (legacy behaviour pinned above)
+    assert resolve_budget(QuokaConfig(budget_ratio=0.25, granularity=1),
+                          1000) == 250
 
 
 def test_ratio_budget_selects_fraction():

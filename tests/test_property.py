@@ -16,8 +16,8 @@ from hypothesis import given, settings
 from repro.configs.base import QuokaConfig
 from repro.core.attention import (attention_with_positions, blocked_attention,
                                   dense_attention, position_mask)
-from repro.core.quoka import quoka_select, select_topk, subselect_queries
-from repro.core import selection as sel_mod
+from repro.core import plan as plan_mod
+from repro.core.quoka import subselect_queries
 
 SETTINGS = dict(max_examples=20, deadline=None, derandomize=True,
                 suppress_health_check=[hypothesis.HealthCheck.too_slow])
@@ -38,8 +38,9 @@ def test_selection_only_picks_valid_prior_slots(seed, t, h, nkv, budget):
     k = _arr(seed + 1, (1, t, nkv, d))
     key_pos = jnp.arange(t)[None]
     start = max(1, t // 2)
-    sel = quoka_select(q, k, k, key_pos, jnp.asarray(start),
-                       QuokaConfig(budget=budget, n_queries=4, keep_first=2))
+    sel = plan_mod.select("quoka", q, k, k, key_pos, jnp.asarray(start),
+                          QuokaConfig(budget=budget, n_queries=4,
+                                      keep_first=2))
     pos = np.asarray(sel.pos)
     assert ((pos == -1) | ((pos >= 0) & (pos < start))).all()
     n_valid = (pos[0, 0] >= 0).sum()
@@ -54,9 +55,9 @@ def test_quoka_selection_scale_invariant(seed, scale):
     k = _arr(seed + 1, (1, 64, 2, 8))
     key_pos = jnp.arange(64)[None]
     cfg = QuokaConfig(budget=16, n_queries=8, keep_first=0)
-    s1 = quoka_select(q, k, k, key_pos, jnp.asarray(60), cfg)
-    s2 = quoka_select(q * scale, k * scale, k * scale, key_pos,
-                      jnp.asarray(60), cfg)
+    s1 = plan_mod.select("quoka", q, k, k, key_pos, jnp.asarray(60), cfg)
+    s2 = plan_mod.select("quoka", q * scale, k * scale, k * scale, key_pos,
+                         jnp.asarray(60), cfg)
     a = np.sort(np.asarray(s1.idx), axis=-1)
     b = np.sort(np.asarray(s2.idx), axis=-1)
     assert (a == b).all()
@@ -116,7 +117,7 @@ def test_all_methods_select_within_budget(seed, method):
     k = _arr(seed + 1, (1, 64, 2, 8))
     key_pos = jnp.arange(64)[None]
     cfg = QuokaConfig(budget=12, n_queries=4, keep_first=2)
-    sel = sel_mod.select(method, q, k, k, key_pos, jnp.asarray(48), cfg)
+    sel = plan_mod.select(method, q, k, k, key_pos, jnp.asarray(48), cfg)
     pos = np.asarray(sel.pos)
     assert pos.shape[-1] == 12
     assert ((pos == -1) | ((pos >= 0) & (pos < 48))).all()

@@ -1,13 +1,14 @@
-"""Unit tests for the paper's Algorithm 1 (core/quoka.py)."""
+"""Unit tests for the paper's Algorithm 1 (core/quoka.py scoring +
+core/plan.py select/materialize)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs.base import QuokaConfig
+from repro.core import plan as plan_mod
 from repro.core.attention import NEG_INF
-from repro.core.quoka import (Selected, quoka_scores, quoka_select,
-                              select_topk, subselect_queries)
+from repro.core.quoka import Selected, quoka_scores, subselect_queries
 from repro.models.layers import cosine_sim, l2_normalize
 
 KEY = jax.random.PRNGKey(0)
@@ -72,7 +73,9 @@ def test_select_topk_budget_and_positions():
     key_pos = jnp.arange(t)[None].repeat(b, 0)
     scores = jax.random.normal(jax.random.fold_in(KEY, 2),
                                (b, n_kv, t)).astype(jnp.float32)
-    sel = select_topk(scores, k, v, key_pos, budget=16)
+    cfg = QuokaConfig(keep_first=0)
+    pln = plan_mod.plan_from_scores(scores, key_pos, cfg, budget=16)
+    sel = plan_mod.materialize(pln, k, v, key_pos, jnp.asarray(t), cfg)
     assert sel.k.shape == (b, 16, n_kv, d)
     assert sel.pos.shape == (b, n_kv, 16)
     # gathered values must equal source rows at the selected slots
@@ -91,7 +94,9 @@ def test_select_topk_respects_keep_first():
     key_pos = jnp.arange(t)[None]
     scores = jnp.where(jnp.arange(t)[None, None, :] < 4, -5.0, 1.0)
     scores = scores.astype(jnp.float32)
-    sel = select_topk(scores, k, k, key_pos, budget=8, keep_first=4)
+    cfg = QuokaConfig(keep_first=4)
+    pln = plan_mod.plan_from_scores(scores, key_pos, cfg, budget=8)
+    sel = plan_mod.materialize(pln, k, k, key_pos, jnp.asarray(t), cfg)
     got = set(np.asarray(sel.pos[0, 0]).tolist())
     assert {0, 1, 2, 3} <= got
 
@@ -101,8 +106,8 @@ def test_select_fewer_valid_than_budget():
     k = jax.random.normal(KEY, (b, t, n_kv, d))
     key_pos = jnp.arange(t)[None]
     q = jax.random.normal(KEY, (b, 8, 2, d))
-    sel = quoka_select(q, k, k, key_pos, jnp.asarray(5),
-                       QuokaConfig(budget=16, n_queries=4, keep_first=0))
+    sel = plan_mod.select("quoka", q, k, k, key_pos, jnp.asarray(5),
+                          QuokaConfig(budget=16, n_queries=4, keep_first=0))
     valid = np.asarray(sel.pos[0, 0]) >= 0
     assert valid.sum() == 5                      # only 5 selectable
     assert (np.asarray(sel.pos[0, 0])[valid] < 5).all()
@@ -125,17 +130,17 @@ def test_ragged_tail_queries_do_not_skew_selection():
     q_full = jnp.concatenate([q, garbage], axis=1)
     q_valid = (jnp.arange(t) < vlen)[None]
 
-    ref = quoka_select(q, k, v, key_pos, jnp.asarray(32), cfg)
-    got = quoka_select(q_full, k, v, key_pos, jnp.asarray(32), cfg,
-                       q_valid=q_valid)
+    sel = lambda qq, **kw: plan_mod.select("quoka", qq, k, v, key_pos,
+                                           jnp.asarray(32), cfg, **kw)
+    ref = sel(q)
+    got = sel(q_full, q_valid=q_valid)
     np.testing.assert_array_equal(np.asarray(got.idx), np.asarray(ref.idx))
     np.testing.assert_array_equal(np.asarray(got.pos), np.asarray(ref.pos))
     np.testing.assert_allclose(np.asarray(got.k), np.asarray(ref.k))
     # ...and fewer valid queries than N_Q degrades to harmless duplicates
     # (t <= n_queries early-return keeps sanitized rows only)
-    got2 = quoka_select(q_full[:, :6], k, v, key_pos, jnp.asarray(32),
-                        cfg, q_valid=q_valid[:, :6])
-    ref2 = quoka_select(q_full[:, :5], k, v, key_pos, jnp.asarray(32), cfg)
+    got2 = sel(q_full[:, :6], q_valid=q_valid[:, :6])
+    ref2 = sel(q_full[:, :5])
     np.testing.assert_array_equal(np.asarray(got2.idx), np.asarray(ref2.idx))
 
 

@@ -1,0 +1,352 @@
+"""SelectionPlan (core/plan.py): the staged score -> select -> materialize
+pipeline, block granularity, cross-layer reuse and the contiguous-gather
+invariant the paged serving path relies on.
+
+The sharded half runs in one subprocess under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (same pattern as
+test_sharded_serving.py): plan indices built through the T-local shard_map
+candidate path must be bit-identical to the meshless build.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import hlo
+from repro.configs import get_config
+from repro.configs.base import QuokaConfig
+from repro.core import plan as plan_mod
+from repro.core.attention import NEG_INF
+from repro.core.chunked_prefill import output_error
+from repro.data.synthetic import structured_qkv
+from repro.models.model import build_model
+from repro.serving import pool as pl
+
+KEY = jax.random.PRNGKey(0)
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# staged pipeline contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("granularity", [1, 16])
+def test_staged_equals_fused(granularity):
+    """build + materialize is exactly select, and the plan's static shape
+    is plan_idx_shape's."""
+    b, t, h, n_kv, d = 2, 64, 4, 2, 16
+    q = jax.random.normal(KEY, (b, 16, h, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, t, n_kv, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, t, n_kv, d))
+    pos = jnp.arange(t, dtype=jnp.int32)[None].repeat(b, 0)
+    cfg = QuokaConfig(budget=32, n_queries=8, keep_first=4,
+                      granularity=granularity)
+    start = jnp.asarray(48)
+    pln = plan_mod.build("quoka", q, k, pos, start, cfg)
+    assert pln.idx.shape == plan_mod.plan_idx_shape(cfg, b, n_kv, t)
+    sel = plan_mod.materialize(pln, k, v, pos, start, cfg)
+    ref = plan_mod.select("quoka", q, k, v, pos, start, cfg)
+    for a, r in zip(sel, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(r))
+
+
+def test_block_plan_is_shared_across_heads():
+    """g > 1 plans carry BLOCK ids shared by every KV head (a per-head
+    block plan could not be a block-table sub-view), and materialize
+    broadcasts identical per-token metadata to each head."""
+    b, t, n_kv, d = 1, 64, 2, 8
+    k = jax.random.normal(KEY, (b, t, n_kv, d))
+    pos = jnp.arange(t, dtype=jnp.int32)[None]
+    cfg = QuokaConfig(granularity=8, keep_first=0)
+    scores = jax.random.normal(jax.random.fold_in(KEY, 3), (b, n_kv, t))
+    pln = plan_mod.plan_from_scores(scores.astype(jnp.float32), pos, cfg,
+                                    budget=32)
+    assert pln.idx.shape == (b, 4)                       # blocks, not tokens
+    sel = plan_mod.materialize(pln, k, k, pos, jnp.asarray(t), cfg)
+    np.testing.assert_array_equal(np.asarray(sel.pos[0, 0]),
+                                  np.asarray(sel.pos[0, 1]))
+
+
+def test_block_full_budget_matches_dense():
+    """Equivalence gate at block granularity: budget >= T selects every
+    prior block, so chunked output == dense causal attention."""
+    q = jax.random.normal(KEY, (1, 128, 4, 16))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 128, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 128, 2, 16))
+    cfg = QuokaConfig(chunk_size=32, budget=128, granularity=16,
+                      n_queries=8, keep_first=0)
+    assert float(output_error(q, k, v, cfg, "quoka")) < 2e-3
+
+
+def test_block_union_across_chunk_boundary():
+    """A block straddling the chunk boundary is selected WHOLE; its
+    not-yet-prior tokens come back as pos = -1 budget padding with the
+    slot index re-derived at materialize time."""
+    t, g = 32, 8
+    pos = jnp.arange(t, dtype=jnp.int32)[None]
+    start = 12                                 # boundary inside block 1
+    tok = jnp.arange(t)
+    scores = jnp.where(tok < start, jnp.where(tok >= 8, 5.0, 1.0),
+                       NEG_INF)[None, None, :].astype(jnp.float32)
+    cfg = QuokaConfig(granularity=g, keep_first=0)
+    pln = plan_mod.plan_from_scores(scores, pos, cfg, budget=16)
+    # block 1 (max 5.0) then block 0 (max 1.0); blocks 2/3 are all-invalid
+    np.testing.assert_array_equal(np.asarray(pln.idx), [[1, 0]])
+    k = jax.random.normal(KEY, (1, t, 1, 4))
+    sel = plan_mod.materialize(pln, k, k, pos, jnp.asarray(start), cfg)
+    np.testing.assert_array_equal(
+        np.asarray(sel.pos[0, 0]),
+        [8, 9, 10, 11, -1, -1, -1, -1, 0, 1, 2, 3, 4, 5, 6, 7])
+    got = np.asarray(sel.idx[0, 0])
+    want = np.asarray([8, 9, 10, 11, -1, -1, -1, -1] + list(range(8)))
+    np.testing.assert_array_equal(got, want)
+    valid = want >= 0
+    np.testing.assert_allclose(np.asarray(sel.k[0, valid, 0]),
+                               np.asarray(k[0, want[valid], 0]))
+
+
+def test_block_granularity_accuracy_delta_bounded():
+    """Accuracy proxy (paper eq. (4)): selecting whole 16-token blocks
+    instead of tokens costs a bounded output-error delta at half budget."""
+    q, k, v = structured_qkv(jax.random.PRNGKey(3), 2, 512, 8, 2, 32)
+    tok = QuokaConfig(chunk_size=128, budget=256, n_queries=16, keep_first=4)
+    blk = dataclasses.replace(tok, granularity=16)
+    err_tok = float(output_error(q, k, v, tok, "quoka"))
+    err_blk = float(output_error(q, k, v, blk, "quoka"))
+    assert err_blk < 0.5, (err_tok, err_blk)
+    assert err_blk <= err_tok + 0.15, (err_tok, err_blk)
+
+
+# ---------------------------------------------------------------------------
+# cross-layer reuse
+# ---------------------------------------------------------------------------
+
+def test_refresh_cadence_and_corrections():
+    """refresh rebuilds at layer % interval == 0 and at correction layers,
+    reuses the carried indices in between."""
+    shape = (1, 4)
+    cfg = QuokaConfig(reuse_interval=2, correction_layers=(3,))
+    mk = lambda tag: (lambda: plan_mod.SelectionPlan(
+        idx=jnp.full(shape, tag, jnp.int32)))
+    carry = plan_mod.empty_carry(shape)
+    seen = []
+    for li in range(6):
+        pln, carry = plan_mod.refresh(carry, li, cfg, mk(li))
+        assert carry is not None and bool(carry.valid)
+        seen.append(int(pln.idx[0, 0]))
+    assert seen == [0, 0, 2, 3, 4, 4]
+    # no carry (reuse disabled / unsupported geometry): build every layer
+    pln, carry = plan_mod.refresh(None, 5, cfg, mk(7))
+    assert carry is None and int(pln.idx[0, 0]) == 7
+
+
+GRANITE = get_config("granite-3-2b").smoke(n_layers=4)
+
+
+def _quoka_variant(**kw):
+    return dataclasses.replace(
+        GRANITE, quoka=dataclasses.replace(GRANITE.quoka, **kw))
+
+
+@pytest.fixture(scope="module")
+def granite_params():
+    # params do not depend on QuokaConfig: one init serves every variant
+    return build_model(GRANITE).init(jax.random.PRNGKey(0))
+
+
+def _prefill_logits(cfg, params, toks):
+    model = build_model(cfg)
+    cache = model.init_cache(toks.shape[0], toks.shape[1])
+    logits, _ = model.prefill(params, {"tokens": toks}, cache, "quoka")
+    return np.asarray(logits)
+
+
+@pytest.mark.slow
+def test_corrections_everywhere_equal_interval_one(granite_params):
+    """reuse_interval=4 with correction layers covering EVERY layer must
+    rebuild everywhere — token-identical to reuse_interval=1."""
+    toks = jax.random.randint(KEY, (2, 96), 3, GRANITE.vocab)
+    base = _prefill_logits(_quoka_variant(reuse_interval=1), granite_params,
+                           toks)
+    corr = _prefill_logits(
+        _quoka_variant(reuse_interval=4, correction_layers=(0, 1, 2, 3)),
+        granite_params, toks)
+    np.testing.assert_allclose(corr, base, atol=1e-6, rtol=1e-6)
+
+
+@pytest.mark.slow
+def test_reuse_interval_engages_and_decodes(granite_params):
+    """Plans reused across layers actually change the computation (layers
+    1..3 consume layer 0's plan), and the decode path carries plans too."""
+    from repro.serving.engine import Engine
+    toks = jax.random.randint(KEY, (2, 96), 3, GRANITE.vocab)
+    base = _prefill_logits(_quoka_variant(reuse_interval=1), granite_params,
+                           toks)
+    reused = _prefill_logits(_quoka_variant(reuse_interval=4),
+                             granite_params, toks)
+    assert not np.allclose(reused, base, atol=1e-6), \
+        "reuse_interval=4 produced bit-identical logits: carry not engaged"
+    cfg = _quoka_variant(reuse_interval=2)
+    eng = Engine(build_model(cfg), granite_params, method="quoka")
+    out = eng.generate(eng.pad_prompt(np.asarray(toks)), 4)
+    tok = np.asarray(out.tokens)
+    assert tok.shape == (2, 4)                           # the new tokens
+    assert (tok >= 0).all() and (tok < cfg.vocab).all()
+
+
+# ---------------------------------------------------------------------------
+# paged pool: plans as block-table sub-views + the contiguity invariant
+# ---------------------------------------------------------------------------
+
+def _pool_data(num_blocks, block_size, n_kv, d):
+    k = jax.random.normal(KEY, (1, num_blocks, block_size, n_kv, d))
+    pos = jnp.arange(num_blocks * block_size, dtype=jnp.int32).reshape(
+        1, num_blocks, block_size)
+    return {"k": k, "pos": pos}
+
+
+def test_gather_blocks_is_block_table_subview():
+    bs, n_kv, d = 4, 2, 4
+    data = _pool_data(6, bs, n_kv, d)
+    table = jnp.asarray([[0, 1, 2], [3, 4, -1]], jnp.int32)
+    ids = jnp.asarray([[2, 0], [1, -1]], jnp.int32)      # logical, -1 pad
+    out = pl.gather_blocks(data, table, ids, 6, bs)
+    assert out["k"].shape == (1, 2, 2 * bs, n_kv, d)
+    np.testing.assert_allclose(np.asarray(out["k"][0, 0, :bs]),
+                               np.asarray(data["k"][0, 2]))
+    np.testing.assert_allclose(np.asarray(out["k"][0, 0, bs:]),
+                               np.asarray(data["k"][0, 0]))
+    np.testing.assert_allclose(np.asarray(out["k"][0, 1, :bs]),
+                               np.asarray(data["k"][0, 4]))
+    # padding ids read as pos = -1 (and zero payload), like empty table slots
+    assert (np.asarray(out["pos"][0, 1, bs:]) == -1).all()
+    assert (np.asarray(out["k"][0, 1, bs:]) == 0).all()
+
+
+def test_materialize_hlo_contiguous_block_slices():
+    """The invariant the paged path relies on: at g > 1 every KV-payload
+    gather in the compiled module moves whole g-token slabs — slice_sizes
+    span the block extent, no per-token gather."""
+    b, t, n_kv, d, g = 2, 128, 4, 64, 16
+    cfg = QuokaConfig(granularity=g, keep_first=0)
+    k = jax.random.normal(KEY, (b, t, n_kv, d))
+    pos = jnp.arange(t, dtype=jnp.int32)[None].repeat(b, 0)
+    idx = jnp.asarray([[0, 2, 5, -1]] * b, jnp.int32)
+    fn = jax.jit(lambda i, k, v: plan_mod.materialize(
+        plan_mod.SelectionPlan(idx=i), k, v, pos, jnp.asarray(t), cfg))
+    txt = fn.lower(idx, k, k).compile().as_text()
+    sizes = hlo.gather_slice_sizes(txt)
+    payload = [s for s in sizes if d in s]
+    assert payload, f"no KV-payload gather found: {sizes}"
+    assert all(g in s for s in payload), \
+        f"per-token gather on the KV payload: {sizes}"
+
+
+def test_gather_blocks_hlo_contiguous_block_slices():
+    """Same invariant on the pool side: gather_blocks lowers to one
+    dynamic block_size-row slice per selected block for every pool leaf."""
+    bs, n_kv, d = 16, 2, 8
+    data = _pool_data(8, bs, n_kv, d)
+    table = jnp.zeros((2, 4), jnp.int32)
+    ids = jnp.zeros((2, 2), jnp.int32)
+    fn = jax.jit(lambda dat, tb, bi: pl.gather_blocks(dat, tb, bi, 8, bs))
+    txt = fn.lower(data, table, ids).compile().as_text()
+    sizes = hlo.gather_slice_sizes(txt)
+    payload = [s for s in sizes if len(s) >= 3]          # pool data leaves
+    assert payload, f"no pool-leaf gather found: {sizes}"
+    assert all(bs in s for s in payload), \
+        f"sub-block gather on a pool leaf: {sizes}"
+
+
+def test_serve_rejects_grid_misaligned_block_size(granite_params):
+    """make_serve_state must refuse a pool whose block grid the selection
+    grid does not divide — block plans could not be table sub-views."""
+    from repro.serving.engine import Engine
+    from repro.serving.request import make_requests
+    eng = Engine(build_model(_quoka_variant(granularity=12)),
+                 granite_params, method="quoka")
+    reqs = make_requests([np.arange(3, 35, dtype=np.int32)], 4)
+    with pytest.raises(ValueError, match="granularity"):
+        eng.make_serve_state(reqs, block_size=16)
+
+
+# ---------------------------------------------------------------------------
+# sharded plan candidates == meshless, bit for bit
+# ---------------------------------------------------------------------------
+
+SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import sys
+    sys.path.insert(0, __SRC__)
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.analysis import hlo
+    from repro.configs.base import QuokaConfig
+    from repro.core import plan as plan_mod
+    from repro.core import quoka as qk
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding import ctx as shctx
+
+    b, t, h, n_kv, d = 2, 128, 8, 2, 32
+    q = jax.random.normal(jax.random.PRNGKey(1), (b, 16, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(2), (b, t, n_kv, d),
+                          jnp.float32)
+    pos = jnp.arange(t, dtype=jnp.int32)[None].repeat(b, 0)
+    start = jnp.asarray(96)
+    mesh = make_host_mesh(model=4, data=2)
+    out = {}
+    for g, budget in ((1, 48), (16, 64)):
+        cfg = QuokaConfig(budget=budget, n_queries=8, keep_first=4,
+                          granularity=g)
+        ref = plan_mod.build("quoka", q, k, pos, start, cfg)
+        snap = shctx.get_policy()
+        shctx.set_policy(mesh, ("data",))
+        try:
+            with mesh:
+                assert qk._tp_route(k, cfg) is not None, "TP path idle"
+                got = plan_mod.build("quoka", q, k, pos, start, cfg)
+                fn = jax.jit(lambda q, k, p, c=cfg: plan_mod.build(
+                    "quoka", q, k, p, start, c).idx)
+                txt = fn.lower(q, k, pos).compile().as_text()
+        finally:
+            shctx.restore_policy(snap)
+        out[f"g{g}/bit_exact"] = bool(np.array_equal(
+            np.asarray(ref.idx), np.asarray(got.idx)))
+        out[f"g{g}/allgather_bytes"] = hlo.collective_bytes(txt).get(
+            "all-gather", 0)
+    out["k_cache_bytes"] = b * t * n_kv * d * 4
+    print("RESULT", json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def sharded_plan_result():
+    code = SUBPROC.replace("__SRC__", repr(os.path.abspath(SRC)))
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=600)
+    for line in res.stdout.splitlines():
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise AssertionError(f"subprocess failed:\n{res.stderr[-3000:]}")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("g", [1, 16])
+def test_sharded_plan_candidates_bit_exact(sharded_plan_result, g):
+    """The T-local shard_map candidate merge returns the SAME plan indices
+    as the meshless build — token slots at g=1, block ids at g=16 — and
+    moves only candidates (tiny all-gather), never the K cache."""
+    r = sharded_plan_result
+    assert r[f"g{g}/bit_exact"], r
+    ag = r[f"g{g}/allgather_bytes"]
+    assert ag > 0, "shard_map candidate merge did not engage"
+    assert ag < r["k_cache_bytes"] / 4, r

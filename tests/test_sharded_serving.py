@@ -13,7 +13,7 @@ Checked:
     the unsharded engine for ``full`` AND ``quoka``, including a second
     serve pass admitted through prefix-cache hits over a warm pool.
   * the sharded scoring pass issues no full-cache all-gather: the compiled
-    HLO of a jitted ``quoka_select`` carries only the candidate-merge
+    HLO of a jitted ``plan.select`` carries only the candidate-merge
     all-gather (a few hundred bytes), orders of magnitude below the K
     cache it used to reshard (analysis/hlo.py byte accounting).
 """
@@ -74,15 +74,15 @@ SUBPROC = textwrap.dedent("""
         out[method + "/cache_hits"] = int(shd.stats["cache_hits"])
 
     # ---- HLO: the sharded scoring pass must not reshard the K cache ----
-    from repro.core.quoka import quoka_select
+    from repro.core import plan as plan_mod
     b, t, h, n_kv, d = 2, 64, cfg.n_heads, cfg.n_kv_heads, \\
         cfg.resolved_head_dim
     q = jax.random.normal(jax.random.PRNGKey(1), (b, 16, h, d), jnp.float32)
     k = jax.random.normal(jax.random.PRNGKey(2), (b, t, n_kv, d),
                           jnp.float32)
     pos = jnp.arange(t, dtype=jnp.int32)[None].repeat(b, 0)
-    fn = jax.jit(lambda q, k, v, p: quoka_select(q, k, v, p,
-                                                 jnp.asarray(48), cfg.quoka))
+    fn = jax.jit(lambda q, k, v, p: plan_mod.select(
+        "quoka", q, k, v, p, jnp.asarray(48), cfg.quoka))
     snap = shctx.get_policy()
     shctx.set_policy(mesh, ("data",))
     try:
