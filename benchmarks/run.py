@@ -22,12 +22,58 @@ Suites bundle related benchmarks:
                    for the fast-tier geometry.
 """
 import argparse
+import json
+import os
+import subprocess
 import sys
+import time
 import traceback
 
 SUITES = {
     "serving": ("serving_throughput", "ttft"),
 }
+
+TRAJECTORY = os.path.join(os.path.dirname(__file__), "out",
+                          "BENCH_trajectory.json")
+
+
+def _append_trajectory(ran, failures) -> None:
+    """Append one compact record per driver run to BENCH_trajectory.json
+    (a list; benchmarks/out/ is gitignored — full out/*.json dumps are NOT
+    committed, CI uploads the whole directory as the perf-trajectory
+    artifact instead).  The record keeps the machine-readable headline —
+    every emitted metric's name -> us_per_call — plus enough provenance
+    (time, commit, argv) to line trajectories up across PRs."""
+    from benchmarks.common import RECORDS
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__))).stdout.strip()
+    except Exception:
+        commit = ""
+    rec = {
+        "time": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "commit": commit or None,
+        "argv": sys.argv[1:],
+        "ran": sorted(ran),
+        "failed": sorted(failures),
+        "metrics": {r["name"]: r["us_per_call"] for r in RECORDS},
+    }
+    os.makedirs(os.path.dirname(TRAJECTORY), exist_ok=True)
+    history = []
+    if os.path.exists(TRAJECTORY):
+        try:
+            with open(TRAJECTORY) as f:
+                history = json.load(f)
+            assert isinstance(history, list)
+        except Exception:
+            history = []        # corrupt file: restart, don't crash the run
+    history.append(rec)
+    with open(TRAJECTORY, "w") as f:
+        json.dump(history, f, indent=1)
+    print(f"# appended run record -> {TRAJECTORY} "
+          f"({len(history)} runs)", flush=True)
 
 
 def main() -> None:
@@ -76,6 +122,7 @@ def main() -> None:
         except Exception:
             failures.append(name)
             traceback.print_exc()
+    _append_trajectory(todo.keys(), failures)
     if failures:
         print(f"FAILED benchmarks: {failures}", file=sys.stderr)
         raise SystemExit(1)

@@ -148,12 +148,18 @@ def _granularity_scenario(cfg, params, prompts, arrivals, serve_kw, max_new,
 
 
 def run(*, smoke: bool = False, method: str = "quoka", seed: int = 0,
-        mesh_spec: str = None):
+        mesh_spec: str = None, metrics: bool = False):
     """``mesh_spec`` ('data=N,model=M') serves the trace on a device mesh
     (sharded params/caches/pool — the CI sharded-smoke job runs a 1x2 host
     mesh); every JSON record carries a ``mesh`` field so
     check_regression.py baselines (pinned to mesh="none") stay comparable
-    when sharded and unsharded runs land in the same out/ directory."""
+    when sharded and unsharded runs land in the same out/ directory.
+
+    ``metrics`` serves the continuous trace with the obs/ registry attached:
+    the continuous record gains selected-KV-fraction / occupancy fields
+    (measuring the paper's fewer-KV claim live, not from a formula) and the
+    JSONL / Prometheus / Chrome-trace dumps land in benchmarks/out/ next to
+    the JSON records (the CI telemetry smoke step parses them)."""
     header("serving throughput (continuous batching vs one-at-a-time)")
     mark = json_mark()
     mesh = None
@@ -182,7 +188,11 @@ def run(*, smoke: bool = False, method: str = "quoka", seed: int = 0,
 
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = Engine(model, params, method=method, mesh=mesh)
+    reg = None
+    if metrics:
+        from repro.obs import Registry
+        reg = Registry()
+    eng = Engine(model, params, method=method, mesh=mesh, registry=reg)
     rng = np.random.default_rng(seed)
     prompts, arrivals = _trace(rng, cfg.vocab, n_requests, len_lo, len_hi,
                                rate)
@@ -199,8 +209,23 @@ def run(*, smoke: bool = False, method: str = "quoka", seed: int = 0,
         eng.generate(eng.pad_prompt(prompts[0][:1].repeat(n)[None]),
                      max_new)
 
+    if reg is not None:
+        # the warmup serves above recorded into the registry; swap in a
+        # fresh one (the compiled step fns read eng.registry at runtime)
+        # so the exported telemetry covers only the measured trace
+        from repro.obs import Registry
+        reg = eng.registry = Registry()
     res = eng.serve(make_requests(prompts, max_new, arrivals=arrivals),
                     **serve_kw)
+    obs_fields = {}
+    if reg is not None:
+        kv = reg.histograms.get("select/kv_fraction")
+        if kv is not None and kv.count:
+            obs_fields = dict(selected_kv_fraction_mean=kv.mean,
+                              selected_kv_fraction_min=kv.min)
+        occ = reg.gauges.get("pool/occupancy")
+        if occ is not None:
+            obs_fields["pool_occupancy"] = occ.value
     cont_ttft = np.asarray(sorted(res.ttft_s.values()))
     emit("serving/continuous/tokens_per_s", 1e6 / max(res.tokens_per_s, 1e-9),
          f"tps={res.tokens_per_s:.1f}", bench="serving_throughput",
@@ -210,7 +235,7 @@ def run(*, smoke: bool = False, method: str = "quoka", seed: int = 0,
          tokens_per_s=res.tokens_per_s,
          ttft_p50_s=float(np.percentile(cont_ttft, 50)),
          ttft_p99_s=float(np.percentile(cont_ttft, 99)),
-         occupancy=res.occupancy, n_requests=n_requests)
+         occupancy=res.occupancy, n_requests=n_requests, **obs_fields)
 
     seq_tps, seq_ttft, _ = _sequential(eng, prompts, arrivals, max_new)
     emit("serving/sequential/tokens_per_s", 1e6 / max(seq_tps, 1e-9),
@@ -238,6 +263,14 @@ def run(*, smoke: bool = False, method: str = "quoka", seed: int = 0,
             cfg, params, prompts, arrivals, serve_kw, max_new,
             mesh=mesh, mesh_label=mesh_label)
     write_json("serving_throughput", mark)
+    if reg is not None:
+        import os
+
+        from repro.obs import export_all
+        out_dir = os.path.join(os.path.dirname(__file__), "out")
+        paths = export_all(reg, out_dir, prefix="serving_throughput")
+        for kind, p in sorted(paths.items()):
+            print(f"# telemetry {kind} -> {p}", flush=True)
     return {"continuous_vs_sequential": speedup,
             "prefix_ttft_speedup": prefix_speedup,
             "block_vs_token_ttft_p50": gran_ratio}
@@ -251,8 +284,13 @@ def main():
     ap.add_argument("--mesh", default=None, metavar="data=N,model=M",
                     help="serve on a device mesh (CPU: set XLA_FLAGS="
                          "--xla_force_host_platform_device_count first)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="attach the obs/ telemetry registry to the "
+                         "continuous engine and export JSONL / Prometheus "
+                         "/ Chrome-trace dumps to benchmarks/out/")
     args = ap.parse_args()
-    run(smoke=args.smoke, method=args.method, mesh_spec=args.mesh)
+    run(smoke=args.smoke, method=args.method, mesh_spec=args.mesh,
+        metrics=args.metrics)
 
 
 if __name__ == "__main__":

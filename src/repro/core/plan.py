@@ -63,6 +63,35 @@ class PlanCarry(NamedTuple):
     valid: jax.Array         # () bool
 
 
+class LayerObs(NamedTuple):
+    """Per-layer in-jit selection telemetry — seven device SCALARS (f32),
+    cheap enough to ride out of ``jax.jit`` as extra outputs (the aux-stats
+    pytree contract; no host callbacks on the hot path).
+
+    NaN means "not applicable": non-attention layers are all-NaN; dense
+    layers have no budget/sketch; a layer that REUSED a carried plan has a
+    NaN sketch (scores were never computed — the sketch is a ``lax.cond``
+    output and only the build branch produces one).
+
+    sel_tokens    selected valid KV tokens, mean over batch & KV heads
+    ctx_tokens    selectable prior-context tokens, mean over batch
+                  (sel_tokens / ctx_tokens is the live selected-KV fraction
+                  — the paper's "88% fewer key-value pairs" axis)
+    budget_tokens the resolved grid-aligned B_SA (static, as f32)
+    refreshed     1.0 if this layer BUILT a plan, 0.0 if it reused one
+    score_lo/score_mean/score_hi
+                  sketch of the raw stage-1 score distribution over valid
+                  slots, taken BEFORE sink +inf stamping
+    """
+    sel_tokens: jax.Array
+    ctx_tokens: jax.Array
+    budget_tokens: jax.Array
+    refreshed: jax.Array
+    score_lo: jax.Array
+    score_mean: jax.Array
+    score_hi: jax.Array
+
+
 # ----------------------------------------------------------------------------
 # grid helpers — the ONE place budgets meet the selection grid
 # ----------------------------------------------------------------------------
@@ -105,13 +134,14 @@ def plan_scores(method: str, q, k, key_pos, chunk_start, cfg: QuokaConfig,
     slots, for any scoring method.  ``q_valid`` (b, t) masks ragged-tail /
     pad query rows out of quoka's chunk statistics (the baselines keep
     their published scoring definitions and ignore it)."""
-    valid = prior_context_valid(key_pos, chunk_start)
-    if method == "quoka":
-        q = qk.sanitize_queries(q, q_valid)
-        qs = qk.subselect_queries(q, cfg.n_queries, n_kv=k.shape[2],
-                                  q_valid=q_valid)
-        return qk.quoka_scores(qs, k, valid, cfg)
-    return sel_scores.compute_scores(method, q, k, valid, cfg)
+    with jax.named_scope("plan_scores"):
+        valid = prior_context_valid(key_pos, chunk_start)
+        if method == "quoka":
+            q = qk.sanitize_queries(q, q_valid)
+            qs = qk.subselect_queries(q, cfg.n_queries, n_kv=k.shape[2],
+                                      q_valid=q_valid)
+            return qk.quoka_scores(qs, k, valid, cfg)
+        return sel_scores.compute_scores(method, q, k, valid, cfg)
 
 
 # ----------------------------------------------------------------------------
@@ -175,6 +205,12 @@ def materialize(plan: SelectionPlan, k, v, key_pos, chunk_start,
     """
     b, t, n_kv, d = k.shape
     g = grid(cfg)
+    with jax.named_scope("plan_materialize"):
+        return _materialize(plan, k, v, key_pos, chunk_start, cfg, b, t,
+                            n_kv, d, g)
+
+
+def _materialize(plan, k, v, key_pos, chunk_start, cfg, b, t, n_kv, d, g):
     valid = prior_context_valid(key_pos, chunk_start)            # (b, T)
     if g == 1:
         top_i = plan.idx                                         # (b,n_kv,B)
@@ -268,6 +304,19 @@ def empty_carry(shape) -> PlanCarry:
                      valid=jnp.zeros((), bool))
 
 
+def _refresh_decision(carry: PlanCarry, layer_idx, cfg: QuokaConfig):
+    """Traced () bool: does layer L rebuild?  (invalid carry, the interval
+    grid, or a correction layer.)  Shared by the plain and obs refresh
+    paths so the reuse schedule cannot drift between them."""
+    s = max(1, cfg.reuse_interval)
+    li = jnp.asarray(layer_idx, jnp.int32)
+    do = (~carry.valid) | (li % s == 0)
+    if cfg.correction_layers:
+        corr = jnp.asarray(cfg.correction_layers, jnp.int32)
+        do = do | jnp.any(li == corr)
+    return do
+
+
 def refresh(carry: Optional[PlanCarry], layer_idx, cfg: QuokaConfig,
             build_fn) -> tuple:
     """Per-layer reuse decision: (plan for this layer, updated carry).
@@ -281,12 +330,136 @@ def refresh(carry: Optional[PlanCarry], layer_idx, cfg: QuokaConfig,
     """
     if carry is None:
         return build_fn(), None
-    s = max(1, cfg.reuse_interval)
-    li = jnp.asarray(layer_idx, jnp.int32)
-    do = (~carry.valid) | (li % s == 0)
-    if cfg.correction_layers:
-        corr = jnp.asarray(cfg.correction_layers, jnp.int32)
-        do = do | jnp.any(li == corr)
+    do = _refresh_decision(carry, layer_idx, cfg)
     idx = jax.lax.cond(do, lambda: build_fn().idx, lambda: carry.idx)
     return SelectionPlan(idx=idx), PlanCarry(idx=idx,
                                              valid=jnp.ones((), bool))
+
+
+# ----------------------------------------------------------------------------
+# in-jit telemetry (the aux-stats pytree — see LayerObs)
+# ----------------------------------------------------------------------------
+
+def nan_obs() -> LayerObs:
+    """The all-NaN LayerObs for layers that never select (recurrent /
+    encoder blocks) — keeps the per-layer stats pytree uniform so the stack
+    scan can stack it as ys."""
+    n = jnp.full((), jnp.nan, jnp.float32)
+    return LayerObs(n, n, n, n, n, n, n)
+
+
+def score_sketch(scores: jax.Array) -> jax.Array:
+    """(3,) f32 [min, mean, max] of stage-1 scores over VALID slots.
+
+    Must be taken on the raw ``plan_scores`` output: ``plan_from_scores``
+    stamps +inf onto sink slots, which would corrupt the max.  All-invalid
+    views (first chunk: no prior context) sketch as NaN.
+    """
+    ok = scores > NEG_INF / 2
+    n = jnp.sum(ok)
+    lo = jnp.min(jnp.where(ok, scores, jnp.inf))
+    hi = jnp.max(jnp.where(ok, scores, -jnp.inf))
+    mean = jnp.sum(jnp.where(ok, scores, 0.0)) / jnp.maximum(n, 1)
+    sk = jnp.stack([lo, mean, hi]).astype(jnp.float32)
+    return jnp.where(n > 0, sk, jnp.full((3,), jnp.nan, jnp.float32))
+
+
+def _nan_sketch() -> jax.Array:
+    return jnp.full((3,), jnp.nan, jnp.float32)
+
+
+def dense_obs(key_pos, chunk_start) -> LayerObs:
+    """LayerObs for a dense (no-selection) attention layer: every selectable
+    prior token is attended, there is no budget and no score pass."""
+    valid = prior_context_valid(key_pos, chunk_start)
+    ctxc = jnp.mean(jnp.sum(valid, axis=-1).astype(jnp.float32))
+    n = jnp.full((), jnp.nan, jnp.float32)
+    return LayerObs(sel_tokens=ctxc, ctx_tokens=ctxc, budget_tokens=n,
+                    refreshed=jnp.zeros((), jnp.float32),
+                    score_lo=n, score_mean=n, score_hi=n)
+
+
+def selected_obs(sel_pos, key_pos, chunk_start, budget: int, refreshed,
+                 sketch) -> LayerObs:
+    """LayerObs for a selecting layer, from the materialized budget's
+    validity (``sel_pos == -1`` marks padding — exactly what downstream
+    attention masks, so sel_tokens counts KV pairs actually attended)."""
+    selc = jnp.mean(jnp.sum(sel_pos >= 0, axis=-1).astype(jnp.float32))
+    valid = prior_context_valid(key_pos, chunk_start)
+    ctxc = jnp.mean(jnp.sum(valid, axis=-1).astype(jnp.float32))
+    return LayerObs(sel_tokens=selc, ctx_tokens=ctxc,
+                    budget_tokens=jnp.full((), float(budget), jnp.float32),
+                    refreshed=jnp.asarray(refreshed, jnp.float32),
+                    score_lo=sketch[0], score_mean=sketch[1],
+                    score_hi=sketch[2])
+
+
+def build_obs(method: str, q, k, key_pos, chunk_start, cfg: QuokaConfig,
+              budget: Optional[int] = None,
+              q_valid: Optional[jax.Array] = None):
+    """``build`` that also returns the (3,) score sketch.  The TP T-local
+    route never materializes global scores, so it sketches NaN — plan
+    indices stay bit-exact with ``build`` in every branch."""
+    t = k.shape[1]
+    budget = floor_to_grid(min(budget or sel_scores.resolve_budget(cfg, t),
+                               t), grid(cfg))
+    if method == "quoka" and qk._tp_route(k, cfg) is not None:
+        return build(method, q, k, key_pos, chunk_start, cfg, budget=budget,
+                     q_valid=q_valid), _nan_sketch()
+    scores = plan_scores(method, q, k, key_pos, chunk_start, cfg,
+                         q_valid=q_valid)
+    return (plan_from_scores(scores, key_pos, cfg, budget=budget),
+            score_sketch(scores))
+
+
+def refresh_obs(carry: Optional[PlanCarry], layer_idx, cfg: QuokaConfig,
+                build_fn) -> tuple:
+    """``refresh`` for an obs-carrying ``build_fn`` (returns (plan, sketch)).
+
+    Returns ((plan, sketch), updated carry, refreshed () f32).  The sketch
+    is a ``lax.cond`` output: the reuse branch yields NaN (scores are never
+    computed there — that is the whole point of reuse)."""
+    if carry is None:
+        pln, sk = build_fn()
+        return (pln, sk), None, jnp.ones((), jnp.float32)
+    do = _refresh_decision(carry, layer_idx, cfg)
+
+    def _built():
+        pln, sk = build_fn()
+        return pln.idx, sk
+
+    idx, sk = jax.lax.cond(do, _built, lambda: (carry.idx, _nan_sketch()))
+    return ((SelectionPlan(idx=idx), sk),
+            PlanCarry(idx=idx, valid=jnp.ones((), bool)),
+            do.astype(jnp.float32))
+
+
+def select_with_ctx(ctx, plan, method: str, q, k, v, key_pos, chunk_start,
+                    cfg: QuokaConfig, budget: Optional[int] = None,
+                    q_valid: Optional[jax.Array] = None):
+    """The block-facing selection entry: refresh-or-build + materialize.
+
+    Returns (Selected, updated plan carry).  When ``ctx["obs"]`` is set,
+    the layer's ``LayerObs`` is left in ``ctx["_obs"]`` for the stack scan
+    body to pop (the MoE aux-loss side-channel pattern — ``ctx`` is already
+    a per-layer copy whenever obs is on, see models/stack.py).  When obs is
+    off this is byte-identical to the refresh + materialize it replaced.
+    """
+    li = ctx.get("layer_idx", 0)
+    if not ctx.get("obs"):
+        pln, plan = refresh(
+            plan, li, cfg,
+            lambda: build(method, q, k, key_pos, chunk_start, cfg,
+                          budget=budget, q_valid=q_valid))
+        return materialize(pln, k, v, key_pos, chunk_start, cfg), plan
+    t = k.shape[1]
+    bud = floor_to_grid(min(budget or sel_scores.resolve_budget(cfg, t), t),
+                        grid(cfg))
+    (pln, sketch), plan, refreshed = refresh_obs(
+        plan, li, cfg,
+        lambda: build_obs(method, q, k, key_pos, chunk_start, cfg,
+                          budget=bud, q_valid=q_valid))
+    sel = materialize(pln, k, v, key_pos, chunk_start, cfg)
+    ctx["_obs"] = selected_obs(sel.pos, key_pos, chunk_start, bud,
+                               refreshed, sketch)
+    return sel, plan

@@ -87,18 +87,21 @@ def attention(q, k, v, k_valid=None, *, causal: bool = True,
     Returns (b, tq, h, d).
     """
     be = resolve_backend(backend, cfg)
-    qt = q.transpose(0, 2, 1, 3)
-    kt = k.transpose(0, 2, 1, 3)
-    vt = v.transpose(0, 2, 1, 3)
-    if be == "xla":
-        out = ref.flash_attention_ref(qt, kt, vt, causal=causal,
-                                      boundary=boundary, k_valid=k_valid,
-                                      scale=scale)
-    else:
-        out = flash_attention_bhtd(qt, kt, vt, k_valid, causal=causal,
-                                   boundary=boundary, scale=scale,
-                                   interpret=(be != "pallas"))
-    return out.transpose(0, 2, 1, 3)
+    # trace-time profiler marker: zero runtime cost, attributes the fused
+    # ops to this region in jax.profiler / HLO metadata
+    with jax.named_scope(f"ops_attention_{be}"):
+        qt = q.transpose(0, 2, 1, 3)
+        kt = k.transpose(0, 2, 1, 3)
+        vt = v.transpose(0, 2, 1, 3)
+        if be == "xla":
+            out = ref.flash_attention_ref(qt, kt, vt, causal=causal,
+                                          boundary=boundary, k_valid=k_valid,
+                                          scale=scale)
+        else:
+            out = flash_attention_bhtd(qt, kt, vt, k_valid, causal=causal,
+                                       boundary=boundary, scale=scale,
+                                       interpret=(be != "pallas"))
+        return out.transpose(0, 2, 1, 3)
 
 
 def _score_xla(qbar, k, valid):
@@ -166,17 +169,18 @@ def score(qbar, k, valid, *, backend: Optional[str] = None, cfg=None,
     entry point (projecting a slice == slicing the projected cache, so the
     low-rank mode composes with it exactly).
     """
-    if proj is not None:
-        qbar = (qbar.astype(jnp.float32) @ proj)
-        # project K in its storage dtype — an fp32 projected copy of the
-        # cache would hoist a full-cache conversion (see _score_xla note)
-        k = k @ proj.astype(k.dtype)
     be = resolve_backend(backend, cfg)
-    if be == "xla":
-        return _score_xla(qbar, k, valid)
-    qt = qbar.transpose(0, 2, 1, 3)
-    kt = k.transpose(0, 2, 1, 3)
-    return quoka_score_bhtd(qt, kt, valid, interpret=(be != "pallas"))
+    with jax.named_scope(f"ops_score_{be}"):
+        if proj is not None:
+            qbar = (qbar.astype(jnp.float32) @ proj)
+            # project K in its storage dtype — an fp32 projected copy of the
+            # cache would hoist a full-cache conversion (see _score_xla note)
+            k = k @ proj.astype(k.dtype)
+        if be == "xla":
+            return _score_xla(qbar, k, valid)
+        qt = qbar.transpose(0, 2, 1, 3)
+        kt = k.transpose(0, 2, 1, 3)
+        return quoka_score_bhtd(qt, kt, valid, interpret=(be != "pallas"))
 
 
 # ---------------------------------------------------------------------------

@@ -97,13 +97,47 @@ def _build_trace(model, args, rng):
     return prompts, np.asarray(arrivals)
 
 
+def _print_telemetry(reg):
+    """Human-readable digest of the serve registry (full detail goes to the
+    --trace-dir exports)."""
+    snap = reg.snapshot()
+    h, g = snap["histograms"], snap["gauges"]
+    kv = h.get("select/kv_fraction")
+    if kv and kv["count"]:
+        print(f"{'telemetry':10s} selected-KV fraction mean {kv['mean']:.3f} "
+              f"p50 {kv['p50']:.3f} min {kv['min']:.3f} "
+              f"over {kv['count']} layer-steps "
+              f"({100 * (1 - kv['mean']):.0f}% of KV skipped on average)")
+    for nm in ("engine/prefill_step", "engine/decode_step",
+               "sched/admission_wait_s"):
+        s = h.get(nm)
+        if s and s["count"]:
+            print(f"{'telemetry':10s} {nm}: p50 {s['p50']*1e3:7.1f} ms  "
+                  f"p99 {s['p99']*1e3:7.1f} ms  n {s['count']}")
+    if "pool/occupancy" in g:
+        print(f"{'telemetry':10s} pool occupancy {g['pool/occupancy']:.2f}  "
+              f"cached blocks {g.get('pool/cached_blocks', 0):.0f}")
+
+
+def _export_telemetry(reg, trace_dir, prefix):
+    from repro.obs import export_all
+    paths = export_all(reg, trace_dir, prefix=prefix)
+    for kind, p in sorted(paths.items()):
+        print(f"{'telemetry':10s} {kind} -> {p}")
+
+
 def run_continuous(model, params, args, mesh=None):
     """Trace-driven continuous batching with prefix caching (see
     --trace / --no-prefix-cache)."""
     rng = np.random.default_rng(0)
     prompts, arrivals = _build_trace(model, args, rng)
+    reg = None
+    if args.metrics or args.trace_dir:
+        from repro.obs import Registry
+        reg = Registry()
     eng = Engine(model, params, method=args.method, mesh=mesh,
-                 sampler=SamplerConfig(temperature=args.temperature))
+                 sampler=SamplerConfig(temperature=args.temperature),
+                 registry=reg)
     kw = dict(block_size=args.block_size, num_blocks=args.num_blocks,
               max_prefill_tokens=args.max_prefill_tokens,
               max_decode_batch=args.max_decode_batch,
@@ -112,6 +146,12 @@ def run_continuous(model, params, args, mesh=None):
     # max_nb/num_blocks, which derive from the longest prompt and max_new
     longest = max(prompts, key=len)
     eng.serve(make_requests([longest] * 2, args.max_new), **kw)
+    if reg is not None:
+        # the step functions were compiled telemetry-on and read
+        # ``eng.registry`` at runtime, so swapping in a fresh registry
+        # drops the warmup trace's samples without recompiling
+        from repro.obs import Registry
+        reg = eng.registry = Registry()
     res = eng.serve(make_requests(prompts, args.max_new, arrivals=arrivals),
                     **kw)
     ttft = np.asarray(sorted(res.ttft_s.values()))
@@ -124,10 +164,15 @@ def run_continuous(model, params, args, mesh=None):
           f"{res.decode_steps} decode)")
     s = res.prefix
     if s:
-        print(f"{'cache':10s} {s['cache_hits']}/{s['requests']} requests "
-              f"hit, {s['hit_tokens']}/{s['prompt_tokens']} prompt tokens "
-              f"served from cache ({100 * s['hit_rate']:.1f}%), "
-              f"{s['evictions']} evictions, {s['cow_copies']} COW copies")
+        print(f"{'cache':10s} {s['cache_hits']:.0f}/{s['requests']:.0f} "
+              f"requests hit, {s['hit_tokens']:.0f}/{s['prompt_tokens']:.0f} "
+              f"prompt tokens served from cache ({100 * s['hit_rate']:.1f}%), "
+              f"{s['evictions']:.0f} evictions, "
+              f"{s['cow_copies']:.0f} COW copies")
+    if reg is not None:
+        _print_telemetry(reg)
+        if args.trace_dir:
+            _export_telemetry(reg, args.trace_dir, f"serve_{args.method}")
 
 
 def main():
@@ -173,6 +218,18 @@ def main():
                     help="prompt tokens packed per engine step "
                          "(default: 4 * chunk_size)")
     ap.add_argument("--max-decode-batch", type=int, default=8)
+    ap.add_argument("--metrics", action="store_true",
+                    help="serve-path telemetry (obs/): step spans, "
+                         "scheduler/pool counters and the in-jit per-layer "
+                         "selected-KV fraction; prints a digest after the "
+                         "run.  Off by default — the metrics-off serve "
+                         "path is bit-identical to pre-telemetry builds")
+    ap.add_argument("--trace-dir", default=None,
+                    help="export telemetry (implies --metrics) to DIR: "
+                         "JSONL event log, Prometheus text dump and a "
+                         "Chrome/Perfetto trace of the engine's step spans; "
+                         "one-shot mode instead captures a device timeline "
+                         "there via jax.profiler.trace")
     ap.add_argument("--mesh", default=None, metavar="data=N,model=M",
                     help="serve sharded on a device mesh: params/caches/"
                          "paged pool placed per sharding/specs.py, QUOKA "
@@ -216,7 +273,14 @@ def main():
         eng = Engine(model, params, method=m, mesh=mesh,
                      sampler=SamplerConfig(temperature=args.temperature))
         eng.generate({"tokens": toks}, 2)          # compile warmup
-        r = eng.generate({"tokens": toks}, args.max_new)
+        if args.trace_dir:
+            # one-shot mode: capture the device timeline (the named_scope
+            # markers in kernels/ops.py + core/plan.py label the regions)
+            with jax.profiler.trace(args.trace_dir):
+                r = eng.generate({"tokens": toks}, args.max_new)
+            print(f"# jax profiler trace -> {args.trace_dir}")
+        else:
+            r = eng.generate({"tokens": toks}, args.max_new)
         print(f"{m:18s} TTFT {r.ttft_s*1e3:9.1f} ms   "
               f"decode {r.decode_tps:8.1f} tok/s   "
               f"prompt {args.prompt_len} × {args.batch}")

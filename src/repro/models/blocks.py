@@ -175,13 +175,12 @@ class AttnBlock:
         if method == "full" or kv.capacity <= budget + t:
             att = attention_with_positions(q, kv.k, kv.v, pos, kv.pos,
                                            causal=True, window=self.window)
+            if isinstance(ctx, dict) and ctx.get("obs"):
+                ctx["_obs"] = plan_mod.dense_obs(kv.pos, start)
         else:
-            qcfg = ctx["qcfg"]
-            pln, plan = plan_mod.refresh(
-                plan, ctx.get("layer_idx", 0), qcfg,
-                lambda: plan_mod.build(method, q, kv.k, kv.pos, start, qcfg,
-                                       budget=budget, q_valid=pos >= 0))
-            sel = plan_mod.materialize(pln, kv.k, kv.v, kv.pos, start, qcfg)
+            sel, plan = plan_mod.select_with_ctx(
+                ctx, plan, method, q, kv.k, kv.v, kv.pos, start,
+                ctx["qcfg"], budget=budget, q_valid=pos >= 0)
             att = self._selected_attention(q, k, v, pos, sel,
                                            backend=ctx.get("backend"))
         x = x + linear(p["wo"], att.reshape(b, t, -1))
@@ -369,6 +368,8 @@ class MLABlock:
         if method == "full" or lat.capacity <= budget + t:
             att = self._absorbed_full(p, q_abs, q_rope, lat.ckv,
                                       lat.krope, pos, lat.pos)
+            if isinstance(ctx, dict) and ctx.get("obs"):
+                ctx["_obs"] = plan_mod.dense_obs(lat.pos, start)
         else:
             att, plan = self._selected_attention(p, q_abs, q_rope, ckv, kr,
                                                  pos, lat, start, ctx, plan)
@@ -393,12 +394,9 @@ class MLABlock:
         latent_keys = jnp.concatenate([lat.ckv, lat.krope],
                                       axis=-1)[:, :, None, :]   # (b,T,1,r+rd)
         q_score = jnp.concatenate([q_abs, q_rope], axis=-1)      # (b,t,h,·)
-        pln, plan = plan_mod.refresh(
-            plan, ctx.get("layer_idx", 0), qc,
-            lambda: plan_mod.build(method, q_score, latent_keys, lat.pos,
-                                   start, qc, q_valid=pos >= 0))
-        sel = plan_mod.materialize(pln, latent_keys, latent_keys, lat.pos,
-                                   start, qc)
+        sel, plan = plan_mod.select_with_ctx(
+            ctx, plan, method, q_score, latent_keys, latent_keys, lat.pos,
+            start, qc, q_valid=pos >= 0)
         r = self.cfg.mla.kv_lora_rank
         ckv_sel, kr_sel = sel.k[..., 0, :r], sel.k[..., 0, r:]   # (b,B,·)
         ckv_cat = jnp.concatenate([ckv_sel, ckv_chunk], axis=1)
@@ -587,13 +585,12 @@ class DecCrossBlock:
         if method == "full" or kv.capacity <= budget + t:
             att = attention_with_positions(q, kv.k, kv.v, pos, kv.pos,
                                            causal=True)
+            if isinstance(ctx, dict) and ctx.get("obs"):
+                ctx["_obs"] = plan_mod.dense_obs(kv.pos, start)
         else:
-            qcfg = ctx["qcfg"]
-            pln, plan = plan_mod.refresh(
-                plan, ctx.get("layer_idx", 0), qcfg,
-                lambda: plan_mod.build(method, q, kv.k, kv.pos, start, qcfg,
-                                       budget=budget, q_valid=pos >= 0))
-            s = plan_mod.materialize(pln, kv.k, kv.v, kv.pos, start, qcfg)
+            s, plan = plan_mod.select_with_ctx(
+                ctx, plan, method, q, kv.k, kv.v, kv.pos, start,
+                ctx["qcfg"], budget=budget, q_valid=pos >= 0)
             att = a._selected_attention(q, k, v, pos, s,
                                         backend=ctx.get("backend"))
         return x + linear(sp["wo"], att.reshape(b, t, -1)), kv, plan

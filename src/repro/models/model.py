@@ -208,17 +208,26 @@ class Model:
         )
 
     def _apply_stacks(self, p, x, pos, cache: ModelCache, ctx):
+        """Returns (x, cache, aux, obs): ``obs`` is the per-layer LayerObs
+        aux-stats pytree with (n_layers,) leaves in GLOBAL layer order when
+        ``ctx["obs"]`` is set (core/plan.py), else None."""
         new = []
         aux = jnp.zeros((), jnp.float32)
         plan = None           # cross-layer SelectionPlan carry (core/plan.py)
         layer0 = 0            # global layer offset for the reuse schedule
+        obs = [] if ctx.get("obs") else None
         for s, sp, sc in zip(self.stacks, p["stacks"], cache.stacks):
-            x, nc, a, plan = s.apply(sp, x, pos, sc,
-                                     dict(ctx, layer0=layer0), plan=plan)
+            x, nc, a, plan, ob = s.apply(sp, x, pos, sc,
+                                         dict(ctx, layer0=layer0), plan=plan)
             layer0 += len(s.period) * s.repeats
             new.append(nc)
             aux = aux + a
-        return x, cache._replace(stacks=tuple(new)), aux
+            if obs is not None:
+                obs.append(ob)
+        if obs is not None:
+            obs = obs[0] if len(obs) == 1 else \
+                jax.tree.map(lambda *ls: jnp.concatenate(ls), *obs)
+        return x, cache._replace(stacks=tuple(new)), aux, obs
 
     def _build_cross(self, p, cache: ModelCache, enc_out) -> ModelCache:
         """Fill whisper cross-attention KV (vmapped over stacked layers)."""
@@ -264,8 +273,8 @@ class Model:
         def body(carry, inp):
             cch, _ = carry
             xc, pc, sl = inp
-            h, cch, _aux = self._apply_stacks(p, xc, pc, cch,
-                                              dict(ctx, slot=sl))
+            h, cch, _aux, _ = self._apply_stacks(p, xc, pc, cch,
+                                                 dict(ctx, slot=sl))
             return (cch, h[:, -1, :]), None
 
         (cache, last_h), _ = jax.lax.scan(
@@ -276,7 +285,7 @@ class Model:
     def prefill_chunk(self, p, batch: Dict, pos_start, cache: ModelCache,
                       method: Optional[str] = None,
                       backend: Optional[str] = None,
-                      valid_len=None) -> Tuple[jax.Array, ModelCache]:
+                      valid_len=None, with_obs: bool = False):
         """One B_CP chunk through all stacks — the steady-state unit of
         chunked prefill for per-chunk dispatch (continuous batching / the
         production serving path; §Perf: carrying caches through a scan over
@@ -288,7 +297,10 @@ class Model:
         starts at its own offset).  ``valid_len`` (b,) optionally marks how
         many leading chunk tokens are real (tail chunks of a ragged batch;
         the rest get pos = -1 and are masked everywhere).
-        Returns (last VALID hidden (b, d), cache)."""
+        Returns (last VALID hidden (b, d), cache); with ``with_obs=True``
+        additionally returns the per-layer ``LayerObs`` aux-stats pytree
+        (leaves (n_layers,)) as a third output — extra jit outputs, no host
+        callbacks (the selection computation itself is unchanged)."""
         cfg = self.cfg
         method = method or cfg.quoka.method
         tok = batch["tokens"]
@@ -308,20 +320,24 @@ class Model:
         x = shctx.shard_activation(x)
         ctx = self._ctx(p, method, backend=backend)
         ctx["slot"] = s
-        x, cache, _ = self._apply_stacks(p, x, pos, cache, ctx)
+        if with_obs:
+            ctx["obs"] = True
+        x, cache, _, obs = self._apply_stacks(p, x, pos, cache, ctx)
         if valid_len is None:
-            return x[:, -1, :], cache
-        li = jnp.clip(vl - 1, 0, t - 1)
-        last = jnp.take_along_axis(x, li[:, None, None], axis=1)[:, 0, :]
-        return last, cache
+            last = x[:, -1, :]
+        else:
+            li = jnp.clip(vl - 1, 0, t - 1)
+            last = jnp.take_along_axis(x, li[:, None, None], axis=1)[:, 0, :]
+        return (last, cache, obs) if with_obs else (last, cache)
 
     def decode_step(self, p, tokens, pos, cache: ModelCache,
                     method: Optional[str] = None,
-                    backend: Optional[str] = None
-                    ) -> Tuple[jax.Array, ModelCache]:
+                    backend: Optional[str] = None,
+                    with_obs: bool = False):
         """One decode step.  tokens: (b,) int32; pos: scalar or (b,)
         (per-request positions under continuous batching).
-        Returns (logits (b, V), cache)."""
+        Returns (logits (b, V), cache), plus the per-layer ``LayerObs``
+        pytree as a third output when ``with_obs=True`` (see prefill_chunk)."""
         cfg = self.cfg
         method = method or cfg.quoka.method
         dt = cfg.compute_dtype
@@ -333,8 +349,11 @@ class Model:
             x = x + sinusoidal(pos2, cfg.d_model, dt)
         ctx = self._ctx(p, method, backend=backend)
         ctx["slot"] = ps
-        x, cache, _ = self._apply_stacks(p, x, pos2, cache, ctx)
-        return self._readout(p, x)[:, 0], cache
+        if with_obs:
+            ctx["obs"] = True
+        x, cache, _, obs = self._apply_stacks(p, x, pos2, cache, ctx)
+        logits = self._readout(p, x)[:, 0]
+        return (logits, cache, obs) if with_obs else (logits, cache)
 
 
 def build_model(cfg: ModelConfig) -> Model:

@@ -97,9 +97,14 @@ class Stack:
 
     def apply(self, params: Tuple, x, pos, caches: Tuple, ctx, plan=None):
         """Prefill-chunk / decode forward with caches.
-        Returns (x, new_caches, aux, plan) — ``plan`` is the cross-layer
-        ``PlanCarry`` threaded through the scan when KV-selection reuse is
-        on (core/plan.py), passed through untouched otherwise.
+        Returns (x, new_caches, aux, plan, obs) — ``plan`` is the
+        cross-layer ``PlanCarry`` threaded through the scan when
+        KV-selection reuse is on (core/plan.py), passed through untouched
+        otherwise.  ``obs`` is a ``LayerObs`` pytree with (n_layers,)
+        leaves in global layer order when ``ctx["obs"]`` is set, else None:
+        each block leaves its per-layer stats in its ctx copy (the MoE
+        aux-loss side-channel) and the scan body collects them as ys —
+        seven scalars per layer, nothing like the cache-ys trap below.
 
         Caches live in the scan CARRY and are updated through WINDOWED
         dynamic-update-slices (only the rows a chunk actually writes), not
@@ -114,6 +119,7 @@ class Stack:
         carry0 = self._plan_carry0(caches, t, ctx, plan)
         layer0 = int(ctx.get("layer0", 0)) if isinstance(ctx, dict) else 0
         n_period = len(self.blocks)
+        obs_on = isinstance(ctx, dict) and bool(ctx.get("obs"))
 
         def write_back(blk, buf_tree, new_slice, idx):
             """Windowed write of one layer's cache updates into the stacked
@@ -181,27 +187,40 @@ class Stack:
                 pc = None
             p_slice, idx = xs
             new_bufs = []
+            obs_j = []
             for j, blk in enumerate(self.blocks):
                 h = shctx.shard_activation(h)
                 c_slice = jax.tree.map(
                     lambda l: jax.lax.dynamic_index_in_dim(
                         l, idx, axis=0, keepdims=False), bufs[j])
-                cj = ctx if pc is None else \
+                # obs needs a PER-LAYER ctx copy (each layer pops its own
+                # "_obs"); the reuse carry needs one for layer_idx anyway
+                cj = ctx if pc is None and not obs_on else \
                     dict(ctx, layer_idx=layer0 + idx * n_period + j)
                 h, c_new, a, pc = blk.apply(p_slice[j], h, pos, c_slice, cj,
                                             plan=pc)
+                if obs_on:
+                    ob = cj.pop("_obs", None)
+                    obs_j.append(plan_mod.nan_obs() if ob is None else ob)
                 new_bufs.append(write_back(blk, bufs[j], c_new, idx))
                 aux = aux + jnp.asarray(a, jnp.float32)
             out = (h, aux, tuple(new_bufs))
-            return (out + (pc,) if carry0 is not None else out), None
+            ys = jax.tree.map(lambda *ls: jnp.stack(ls), *obs_j) \
+                if obs_on else None
+            return (out + (pc,) if carry0 is not None else out), ys
 
         idxs = jnp.arange(self.repeats, dtype=jnp.int32)
         init = (x, jnp.zeros((), jnp.float32), caches)
         if carry0 is not None:
             init = init + (carry0,)
-        out, _ = jax.lax.scan(body, init, (params, idxs))
+        out, ys = jax.lax.scan(body, init, (params, idxs))
         if carry0 is not None:
             x, aux, caches, plan = out
         else:
             x, aux, caches = out
-        return x, caches, aux, plan
+        obs = None
+        if obs_on:
+            # ys leaves: (repeats, n_period) -> flatten to global layer
+            # order within this stack (layer = idx * n_period + j)
+            obs = jax.tree.map(lambda l: l.reshape(-1, *l.shape[2:]), ys)
+        return x, caches, aux, plan, obs

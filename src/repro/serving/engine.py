@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.obs import registry as obs_reg
 from repro.serving.sampler import SamplerConfig, sample
 
 
@@ -86,7 +87,7 @@ class Engine:
     def __init__(self, model: Model, params, *, method: Optional[str] = None,
                  backend: Optional[str] = None,
                  sampler: SamplerConfig = SamplerConfig(),
-                 mesh=None):
+                 mesh=None, registry=None):
         """``backend`` overrides the kernel backend for this engine
         ("xla" | "pallas_interpret" | "pallas"); None defers to the env /
         ``QuokaConfig.backend`` / hardware resolution (kernels/ops.py).
@@ -99,14 +100,25 @@ class Engine:
         scoring routes through the T-local shard_map path when the KV-head
         axis under-shards the `model` axis (core/quoka.py).  Greedy outputs
         are token-identical to the meshless engine
-        (tests/test_sharded_serving.py)."""
+        (tests/test_sharded_serving.py).
+
+        ``registry`` (repro.obs.Registry) turns on serve-path telemetry:
+        step spans, scheduler/pool counters, and the in-jit per-layer
+        selection stats (the step functions compile WITH the LayerObs
+        aux outputs — extra jit outputs, no host callbacks; with no
+        registry they compile without them, so the metrics-off compute is
+        bit-identical to pre-telemetry behavior).  ``Engine.stats`` is a
+        view of this registry either way (an ephemeral one when off)."""
         from repro.kernels import ops as kops
         self.model = model
         self.mesh = mesh
         self.method = method or model.cfg.quoka.method
         self.backend = kops.resolve_backend(backend, model.cfg.quoka)
         self.sampler = sampler
+        self.registry = registry if registry is not None else obs_reg.NULL
+        self._obs_on = bool(self.registry.enabled)
         self.stats: Dict[str, float] = {}   # prefix-cache stats of last serve
+        self._warmed: set = set()           # generate() jit-warmup signatures
         donate = {}
         if mesh is not None:
             from repro.sharding import specs as sh
@@ -193,6 +205,31 @@ class Engine:
                 self.mesh, sh.batch_spec(model.cfg, batch, self.mesh)))
         key = key if key is not None else jax.random.PRNGKey(0)
 
+        # exclude jit compile time from the clocks: the first call on a new
+        # (shapes, dtypes) signature traces + compiles inside the timed
+        # region, so a cold first generate() used to report compile-dominated
+        # ttft_s.  Warm the jit caches on a THROWAWAY cache with identical
+        # avals (the real cache may be donated under a mesh), then time
+        # execution only.  Repeat calls hit the signature set and skip this.
+        sig = (b, t, cap, max_new > 1,
+               tuple(sorted(k for k in batch if batch[k] is not None)))
+        if sig not in self._warmed:
+            wcache = model.init_cache(b, cap)
+            if self.mesh is not None:
+                from repro.sharding import specs as sh
+                wcache = jax.device_put(wcache, sh.to_shardings(
+                    self.mesh, sh.cache_specs(model.cfg, wcache, self.mesh)))
+            wkey = jax.random.PRNGKey(0)
+            wl, wcache = self._call(self._prefill, params, batch, wcache)
+            wt = sample(wl, wkey, self.sampler)
+            if max_new > 1:
+                wl, wcache = self._call(self._decode, params, wt,
+                                        jnp.asarray(extra), wcache)
+                wt = sample(wl, wkey, self.sampler)
+            wt.block_until_ready()
+            del wcache
+            self._warmed.add(sig)
+
         t0 = time.perf_counter()
         logits, cache = self._call(self._prefill, params, batch, cache)
         tok = sample(logits, key, self.sampler)
@@ -242,6 +279,11 @@ class Engine:
         mesh = self.mesh
         chunk = model.cfg.quoka.chunk_size
         sampler = self.sampler
+        # compiled-in telemetry: with a live registry the step fns return
+        # the per-layer LayerObs pytree as an EXTRA jit output (device
+        # scalars, fetched alongside the sampled tokens); without one they
+        # compile exactly as before — bit-identical metrics-off compute
+        obs_on = self._obs_on
 
         if mesh is not None:
             from repro.sharding import specs as sh
@@ -259,26 +301,28 @@ class Engine:
 
         def prefill_step(p, data, table, tokens, start, vlen, key):
             cache = constrain(pl.gather(data, table, num_blocks, block_size))
-            last_h, cache = model.prefill_chunk(
+            res = model.prefill_chunk(
                 p, {"tokens": tokens}, start, cache, method,
-                backend=backend, valid_len=vlen)
+                backend=backend, valid_len=vlen, with_obs=obs_on)
+            last_h, cache = res[0], res[1]
             logits = model._readout(p, last_h[:, None, :])[:, 0]
             tok = sample(logits, key, sampler)
             wrote = jnp.where(vlen > 0, jnp.full_like(vlen, chunk), 0)
             touched = pl.touched_blocks(start, wrote, max_nb, block_size)
             data = pl.scatter(data, constrain(cache), table, touched,
                               num_blocks, block_size)
-            return data, tok
+            return (data, tok, res[2]) if obs_on else (data, tok)
 
         def decode_step(p, data, table, tokens, pos, live, key):
             cache = constrain(pl.gather(data, table, num_blocks, block_size))
-            logits, cache = model.decode_step(p, tokens, pos, cache,
-                                              method, backend=backend)
+            res = model.decode_step(p, tokens, pos, cache,
+                                    method, backend=backend, with_obs=obs_on)
+            logits, cache = res[0], res[1]
             tok = sample(logits, key, sampler)
             touched = pl.touched_blocks(pos, live, max_nb, block_size)
             data = pl.scatter(data, constrain(cache), table, touched,
                               num_blocks, block_size)
-            return data, tok
+            return (data, tok, res[2]) if obs_on else (data, tok)
 
         if mesh is None:
             fns = (jax.jit(prefill_step), jax.jit(decode_step))
@@ -294,10 +338,13 @@ class Engine:
             rep = jax.sharding.NamedSharding(
                 mesh, jax.sharding.PartitionSpec())
             host = (rep,) * 4
+            # `rep` broadcasts over the LayerObs pytree as an out-shardings
+            # prefix: the per-layer stats are tiny replicated scalars
+            out_sh = (data_sh, rep) + ((rep,) if obs_on else ())
             fns = tuple(
                 jax.jit(fn,
                         in_shardings=(self._param_sh, data_sh) + host + (rep,),
-                        out_shardings=(data_sh, rep),
+                        out_shardings=out_sh,
                         donate_argnums=(1,))
                 for fn in (prefill_step, decode_step))
         self._cont_fns[sig] = fns
@@ -361,12 +408,45 @@ class Engine:
         pool = PagedKVCache(self.model, num_blocks, block_size,
                             mesh=self.mesh)
         sched = Scheduler(pool, chunk, max_prefill_tokens, max_decode_batch,
-                          prefix_cache=prefix_cache, prefix_align=align)
+                          prefix_cache=prefix_cache, prefix_align=align,
+                          registry=self.registry)
         fns = self._continuous_fns(block_size, max_nb, b_p, b_d, num_blocks)
         key = key if key is not None else jax.random.PRNGKey(0)
         return ServeState(pool=pool, sched=sched, fns=fns, key=key,
                           chunk=chunk, max_nb=max_nb, b_prefill=b_p,
                           b_decode=b_d)
+
+    def _record_layer_obs(self, phase: str, lobs) -> None:
+        """Feed one step's in-jit ``LayerObs`` pytree (per-layer device
+        scalars, core/plan.py) into the registry: per-layer selected-KV
+        fraction vs the budget ratio, plan refresh/reuse counts, and the
+        score-distribution sketch.  NaN marks not-applicable (non-selecting
+        blocks; budget/sketch on dense-fallback layers; sketch on plan-reuse
+        steps) and is skipped.  One stacked host transfer per step."""
+        reg = self.registry
+        sel, ctx, bud, ref, lo, mean, hi = np.asarray(
+            jnp.stack(lobs))                           # (7, n_layers)
+        with np.errstate(invalid="ignore", divide="ignore"):
+            frac = sel / ctx
+            budf = bud / ctx
+        for li in range(sel.shape[0]):
+            if not np.isfinite(frac[li]):
+                continue
+            reg.set(f"select/layer{li:02d}/kv_fraction", frac[li])
+            reg.observe("select/kv_fraction", frac[li])
+            reg.observe(f"select/{phase}/kv_fraction", frac[li])
+            if np.isfinite(budf[li]):
+                reg.set(f"select/layer{li:02d}/budget_fraction", budf[li])
+        fin = ref[np.isfinite(ref)]
+        if fin.size:
+            n_ref = float(fin.sum())
+            reg.count("select/plan_refresh", n_ref)
+            reg.count("select/plan_reuse", float(fin.size) - n_ref)
+        for nm, v in (("score_lo", lo), ("score_mean", mean),
+                      ("score_hi", hi)):
+            v = v[np.isfinite(v)]
+            if v.size:
+                reg.observe(f"select/{nm}", float(v.mean()))
 
     def step(self, state: ServeState) -> Tuple[int, int]:
         """One engine step: admit, run a mixed chunk-prefill step over up to
@@ -374,7 +454,17 @@ class Engine:
         decode step over every active decode request.  Returns
         (prefill rows, decode rows) executed."""
         pool, sched = state.pool, state.sched
-        sched.admit()
+        reg, obs = self.registry, self._obs_on
+        admitted = sched.admit()
+        if obs:
+            now = state.now
+            for r in admitted:
+                reg.observe("sched/admission_wait_s",
+                            max(0.0, now - r.arrival_s))
+            reg.set("sched/queue_depth", float(len(sched.waiting)))
+            reg.set("sched/active", float(sched.n_active))
+            reg.set("pool/occupancy", 1.0 - pool.num_free / pool.num_blocks)
+            reg.set("pool/cached_blocks", float(pool.num_cached))
 
         rows = sched.pack_prefill()
         if rows:
@@ -386,9 +476,16 @@ class Engine:
             table = pool.table_array([r.rid for r, *_ in rows],
                                      state.b_prefill, state.max_nb)
             state.key, k1 = jax.random.split(state.key)
-            pool.data, tok = self._call(state.fns[0], self.params, pool.data,
-                                        table, tokens, start, vlen, k1)
-            tok_np = np.asarray(tok)
+            # the span brackets dispatch THROUGH the token fetch: with the
+            # async runtime the np.asarray sync is where device time lands
+            with reg.span("engine/prefill_step", rows=len(rows)):
+                out = self._call(state.fns[0], self.params, pool.data,
+                                 table, tokens, start, vlen, k1)
+                pool.data, tok = out[0], out[1]
+                tok_np = np.asarray(tok)
+            if obs:
+                self._record_layer_obs("prefill", out[2])
+                reg.count("engine/prefill_tokens", float(vlen.sum()))
             now = state.now
             for i, (r, ch, st, vl) in enumerate(rows):
                 sched.note_prefilled(r, vl, int(tok_np[i]), now)
@@ -404,9 +501,14 @@ class Engine:
             table = pool.table_array([r.rid for r in drows],
                                      state.b_decode, state.max_nb)
             state.key, k2 = jax.random.split(state.key)
-            pool.data, tok = self._call(state.fns[1], self.params, pool.data,
-                                        table, tokens, pos, live, k2)
-            tok_np = np.asarray(tok)
+            with reg.span("engine/decode_step", rows=len(drows)):
+                out = self._call(state.fns[1], self.params, pool.data,
+                                 table, tokens, pos, live, k2)
+                pool.data, tok = out[0], out[1]
+                tok_np = np.asarray(tok)
+            if obs:
+                self._record_layer_obs("decode", out[2])
+                reg.count("engine/decode_tokens", float(len(drows)))
             now = state.now
             for i, r in enumerate(drows):
                 sched.note_decoded(r, int(tok_np[i]), now)
@@ -511,16 +613,42 @@ class Engine:
         generated = sum(len(r.out) for r in done)
         hit_tok = pool.hit_tokens - prefix0[2]
         all_tok = pool.prompt_tokens - prefix0[3]
-        self.stats = {
-            "requests": pool.lookups - prefix0[0],
-            "cache_hits": pool.hit_requests - prefix0[1],
-            "hit_tokens": hit_tok,
-            "prompt_tokens": all_tok,
-            "hit_rate": hit_tok / all_tok if all_tok else 0.0,
-            "evictions": pool.evictions - prefix0[4],
-            "cow_copies": pool.cow_copies - prefix0[5],
-            "cached_blocks": pool.num_cached,
-        }
+        # ``Engine.stats`` / ``ServeResult.prefix`` are REGISTRY VIEWS: the
+        # per-serve prefix-cache stats land in gauges under serve/prefix/
+        # (gauges, not counters — counters would accumulate across serve()
+        # calls on one engine, while these are deltas of THIS trace) and are
+        # read back as a flat suffix-keyed dict.  With metrics off an
+        # ephemeral registry keeps the public dict shape identical.
+        preg = self.registry if self._obs_on else obs_reg.Registry()
+        sc = preg.scope("serve/prefix")
+        sc.set("requests", pool.lookups - prefix0[0])
+        sc.set("cache_hits", pool.hit_requests - prefix0[1])
+        sc.set("hit_tokens", hit_tok)
+        sc.set("prompt_tokens", all_tok)
+        sc.set("hit_rate", hit_tok / all_tok if all_tok else 0.0)
+        sc.set("evictions", pool.evictions - prefix0[4])
+        sc.set("cow_copies", pool.cow_copies - prefix0[5])
+        sc.set("cached_blocks", pool.num_cached)
+        self.stats = preg.view("serve/prefix")
+        if self._obs_on:
+            reg = self.registry
+            for r in done:
+                if r.ttft_s is not None:
+                    reg.observe("serve/ttft_s", r.ttft_s)
+                dec = len(r.out) - 1
+                if dec > 0 and r.done_s is not None and r.ttft_s is not None:
+                    reg.observe("serve/tpot_s",
+                                (r.done_s - r.arrival_s - r.ttft_s) / dec)
+            reg.count("serve/requests_finished", float(len(done)))
+            reg.count("serve/tokens_generated", float(generated))
+            reg.event("serve_done", wall_s=wall, requests=len(done),
+                      generated=generated,
+                      tokens_per_s=generated / wall if wall > 0 else 0.0,
+                      steps=state.steps,
+                      prefill_steps=state.prefill_steps,
+                      decode_steps=state.decode_steps,
+                      method=self.method, backend=self.backend,
+                      **{f"prefix_{k}": v for k, v in self.stats.items()})
         return ServeResult(
             tokens={r.rid: np.asarray(r.out, np.int32) for r in done},
             ttft_s={r.rid: r.ttft_s for r in done},

@@ -433,7 +433,8 @@ def gather(data, table, num_blocks: int, block_size: int):
         return out.reshape(leaf.shape[0], b, nb * block_size,
                            *leaf.shape[3:])
 
-    return jax.tree.map(g, data)
+    with jax.named_scope("pool_gather"):
+        return jax.tree.map(g, data)
 
 
 def gather_blocks(data, table, block_ids, num_blocks: int, block_size: int):
@@ -473,7 +474,8 @@ def scatter(data, gathered, table, touched, num_blocks: int,
         return pool_leaf.at[:, idx].set(blocks.astype(pool_leaf.dtype),
                                         mode="drop")
 
-    return jax.tree.map(s, data, gathered)
+    with jax.named_scope("pool_scatter"):
+        return jax.tree.map(s, data, gathered)
 
 
 def touched_blocks(slot, n_tokens, max_nb: int, block_size: int):

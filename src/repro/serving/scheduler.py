@@ -33,6 +33,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple
 
+from repro.obs import registry as obs_reg
 from repro.serving import request as rq
 from repro.serving.pool import (PagedKVCache, _chain_hashes,
                                 blocks_for_request)
@@ -41,9 +42,14 @@ from repro.serving.pool import (PagedKVCache, _chain_hashes,
 class Scheduler:
     def __init__(self, pool: PagedKVCache, chunk_size: int,
                  max_prefill_tokens: int, max_decode_batch: int,
-                 prefix_cache: bool = False, prefix_align: int = 1):
+                 prefix_cache: bool = False, prefix_align: int = 1,
+                 registry=None):
         assert max_prefill_tokens >= chunk_size, \
             "max_prefill_tokens must fit at least one chunk"
+        # lifecycle counters (obs/registry.py): submitted / admitted /
+        # prefix_hit_* / hit_degraded / finished under sched/.  The default
+        # NULL registry makes every count() a no-op.
+        self.reg = registry if registry is not None else obs_reg.NULL
         self.pool = pool
         self.chunk_size = int(chunk_size)
         self.max_prefill_tokens = int(max_prefill_tokens)
@@ -81,6 +87,7 @@ class Scheduler:
         r.done_s = None
         self._chain.pop(r.rid, None)       # rid may carry new tokens
         self.waiting.append(r)
+        self.reg.count("sched/submitted")
 
     def pending(self) -> bool:
         return bool(self.waiting or self.prefilling or self.decoding)
@@ -134,6 +141,7 @@ class Scheduler:
                 # fits cold.
                 cached, shared, cow, protect = 0, [], None, []
                 n = self.blocks_needed(r)
+                self.reg.count("sched/hit_degraded")
             if not pool.can_alloc(n - len(shared), exclude=protect):
                 break                      # FCFS: no skipping the head
             pool.alloc_prefix(r.rid, n, shared, cow)
@@ -147,6 +155,10 @@ class Scheduler:
             r.status = rq.PREFILL
             self.prefilling.append(self.waiting.pop(0))
             admitted.append(r)
+            self.reg.count("sched/admitted")
+            if cached:
+                self.reg.count("sched/prefix_hit_requests")
+                self.reg.count("sched/prefix_hit_tokens", float(cached))
         return admitted
 
     def pack_prefill(self) -> List[Tuple[rq.Request, "object", int, int]]:
@@ -192,3 +204,4 @@ class Scheduler:
         r.done_s = now
         self.pool.free(r.rid)      # registered prefix blocks stay resident
         self.done.append(r)
+        self.reg.count("sched/finished")

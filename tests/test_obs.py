@@ -1,0 +1,303 @@
+"""Serve-path telemetry (repro/obs): registry semantics, exporter formats,
+and the metrics-on/off parity gate — attaching a registry to the engine must
+not change a single emitted token (full + quoka, prefix-cache hit path
+included), and a disabled registry must record nothing.  Also the
+compile-time-exclusion regression test for ``Engine.generate``: the first
+timed call must run AFTER a warmup execution of the jitted prefill/decode,
+so ``ttft_s`` never includes trace+compile time."""
+import json
+import os
+import re
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.obs import (NULL, Histogram, Registry, chrome_trace, export_all,
+                       jsonl_lines, prometheus_text)
+from repro.serving.engine import Engine
+from repro.serving.request import make_requests
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_config("granite-3-2b").smoke()
+    model = build_model(cfg)
+    return cfg, model, model.init(KEY)
+
+
+# ---------------------------------------------------------------------------
+# registry unit
+# ---------------------------------------------------------------------------
+
+def test_registry_instruments_and_quantile_sanity():
+    reg = Registry()
+    reg.count("a/n", 2)
+    reg.count("a/n")
+    assert reg.counters["a/n"].value == 3.0
+    reg.set("g", 4.5)
+    assert reg.gauges["g"].value == 4.5
+    h = reg.histogram("h")
+    for v in range(100):
+        h.observe(float(v))
+    s = h.summary()
+    assert s["count"] == 100 and s["min"] == 0.0 and s["max"] == 99.0
+    assert s["min"] <= s["p50"] <= s["p90"] <= s["p99"] <= s["max"]
+    assert abs(s["mean"] - 49.5) < 1e-9
+    # same name -> same instrument (create-on-demand, no duplicates)
+    assert reg.histogram("h") is h
+
+
+def test_histogram_reservoir_bounded_and_deterministic():
+    h1 = Histogram(reservoir=64, seed=3)
+    h2 = Histogram(reservoir=64, seed=3)
+    for v in range(1000):
+        h1.observe(float(v))
+        h2.observe(float(v))
+    assert h1.count == 1000 and len(h1._res) == 64
+    assert h1._res == h2._res                   # seeded: reproducible
+    assert h1.min == 0.0 and h1.max == 999.0
+    assert 0.0 <= h1.quantile(0.5) <= 999.0
+
+
+def test_disabled_registry_records_nothing():
+    reg = Registry(enabled=False)
+    reg.count("x")
+    reg.set("y", 1.0)
+    reg.observe("z", 2.0)
+    with reg.span("s"):
+        pass
+    reg.event("e", k=1)
+    assert not reg.counters and not reg.gauges and not reg.histograms
+    assert not reg.events and not reg.trace_events
+    # null instruments are shared singletons, not per-call allocations
+    assert NULL.counter("a") is NULL.counter("b")
+    assert NULL.span("s") is NULL.span("t")
+
+
+def test_span_times_into_histogram_and_trace():
+    reg = Registry()
+    with reg.span("step", rows=3):
+        time.sleep(0.01)
+    h = reg.histograms["step"]
+    assert h.count == 1 and h.sum >= 0.009
+    (ev,) = reg.trace_events
+    assert ev["name"] == "step" and ev["ph"] == "X"
+    assert ev["dur"] >= 0.009 * 1e6
+    assert ev["args"] == {"rows": 3}
+
+
+def test_scope_prefixes_and_view_round_trips():
+    reg = Registry()
+    sc = reg.scope("serve/prefix")
+    sc.set("hits", 2)
+    sc.count("reqs", 4)
+    assert reg.gauges["serve/prefix/hits"].value == 2.0
+    assert reg.view("serve/prefix") == {"hits": 2.0, "reqs": 4.0}
+    assert sc.view() == reg.view("serve/prefix")
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+def _populated_registry():
+    reg = Registry()
+    reg.count("sched/submitted", 3)
+    reg.set("select/layer00/kv_fraction", 0.25)
+    for v in (0.01, 0.02, 0.03):
+        reg.observe("engine/decode_step", v)
+    with reg.span("engine/prefill_step"):
+        pass
+    reg.event("serve_done", generated=12)
+    return reg
+
+
+def test_jsonl_export_parses():
+    recs = [json.loads(line)
+            for line in jsonl_lines(_populated_registry()).splitlines()
+            if line]
+    assert recs[0]["event"] == "serve_done" and recs[0]["generated"] == 12
+    snap = recs[-1]
+    assert snap["event"] == "snapshot"
+    assert snap["counters"]["sched/submitted"] == 3.0
+    assert snap["gauges"]["select/layer00/kv_fraction"] == 0.25
+    assert snap["histograms"]["engine/decode_step"]["count"] == 3
+
+
+def test_prometheus_export_format():
+    txt = prometheus_text(_populated_registry())
+    assert "select_layer00_kv_fraction 0.25" in txt
+    assert 'engine_decode_step{quantile="0.5"}' in txt
+    assert "engine_decode_step_count 3" in txt
+    # exposition format 0.0.4: every sample line is `name[{labels}] value`
+    sample = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*"
+                        r"(\{[a-zA-Z0-9_]+=\"[^\"]*\"\})? \S+$")
+    for line in txt.splitlines():
+        if line and not line.startswith("#"):
+            assert sample.match(line), line
+
+
+def test_chrome_trace_structure():
+    trace = chrome_trace(_populated_registry())
+    evs = trace["traceEvents"]
+    assert evs[0]["ph"] == "M"                 # process_name metadata
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert xs and all({"name", "ts", "dur", "pid", "tid"} <= set(e)
+                      for e in xs)
+    json.dumps(trace)                          # Perfetto-loadable JSON
+
+
+def test_export_all_writes_files(tmp_path):
+    paths = export_all(_populated_registry(), str(tmp_path), prefix="t")
+    assert set(paths) == {"jsonl", "prometheus", "trace"}
+    for p in paths.values():
+        assert os.path.getsize(p) > 0
+
+
+# ---------------------------------------------------------------------------
+# serve parity + invariants
+# ---------------------------------------------------------------------------
+
+def _serve_twice(engine, prompts, max_new):
+    """Cold pass + warm (prefix-hit) pass over one pool."""
+    state = engine.make_serve_state(make_requests(prompts, max_new),
+                                    max_decode_batch=4)
+    cold = engine.serve(make_requests(prompts, max_new), state=state)
+    hot = engine.serve(make_requests(prompts, max_new), state=state)
+    return cold, hot
+
+
+@pytest.mark.parametrize("method", ["full", "quoka"])
+def test_serve_metrics_on_off_token_identical(smoke_model, method):
+    cfg, model, p = smoke_model
+    rng = np.random.default_rng(7)
+    sys_tok = rng.integers(3, cfg.vocab, (48,)).astype(np.int32)
+    prompts = [np.concatenate(
+        [sys_tok, rng.integers(3, cfg.vocab, (16,)).astype(np.int32)])
+        for _ in range(3)]
+    off = Engine(model, p, method=method)
+    cold_off, hot_off = _serve_twice(off, prompts, 5)
+    reg = Registry()
+    on = Engine(model, p, method=method, registry=reg)
+    cold_on, hot_on = _serve_twice(on, prompts, 5)
+    assert all(v > 0 for v in hot_on.cached_len.values())   # hit path ran
+    for rid in cold_off.tokens:
+        np.testing.assert_array_equal(cold_off.tokens[rid],
+                                      cold_on.tokens[rid])
+        np.testing.assert_array_equal(hot_off.tokens[rid],
+                                      hot_on.tokens[rid])
+    # stats stay the backward-compat dict shape on both paths
+    assert off.stats == on.stats
+    assert hot_on.prefix["cache_hits"] == 3
+
+
+def test_registry_invariants_after_serve(smoke_model):
+    cfg, model, p = smoke_model
+    reg = Registry()
+    eng = Engine(model, p, method="quoka", registry=reg)
+    rng = np.random.default_rng(11)
+    # long enough that selection engages (capacity > budget + chunk), so
+    # the per-layer budget gauges are populated in BOTH phases
+    prompts = [rng.integers(3, cfg.vocab, (96,)).astype(np.int32),
+               rng.integers(3, cfg.vocab, (40,)).astype(np.int32)]
+    eng.serve(make_requests(prompts, 4), max_decode_batch=2)
+    c = {k: v.value for k, v in reg.counters.items()}
+    # lifecycle conservation after drain: active == waiting == 0
+    assert c["sched/submitted"] == c["sched/admitted"] == 2
+    assert c["sched/finished"] == 2
+    assert reg.gauges["sched/queue_depth"].value == 0.0
+    # a plan was built at least once per selecting layer
+    assert c["select/plan_refresh"] > 0
+    # selected-KV fraction <= budget ratio, per layer
+    layer_kv = [k for k in reg.gauges
+                if k.startswith("select/layer") and k.endswith("kv_fraction")]
+    assert layer_kv
+    for k in layer_kv:
+        bud = reg.gauges[k.replace("kv_fraction", "budget_fraction")]
+        assert reg.gauges[k].value <= bud.value + 1e-6
+    kv = reg.histograms["select/kv_fraction"]
+    assert kv.count > 0 and 0.0 < kv.min and kv.max <= 1.0 + 1e-6
+    # step spans recorded with sane quantiles
+    for nm in ("engine/prefill_step", "engine/decode_step"):
+        s = reg.histograms[nm].summary()
+        assert 0.0 < s["min"] <= s["p50"] <= s["p99"] <= s["max"]
+    assert 0.0 < reg.gauges["pool/occupancy"].value <= 1.0
+    # per-request latency distributions
+    assert reg.histograms["serve/ttft_s"].count == 2
+    assert reg.counters["serve/tokens_generated"].value == 8.0
+
+
+def test_metrics_overhead_bounded(smoke_model):
+    """Telemetry must not dominate serve cost.  Generous bound: compile is
+    excluded (both engines serve once to warm), and the runner is shared CI
+    hardware, so assert within a loose factor + absolute slack rather than
+    a tight ratio."""
+    cfg, model, p = smoke_model
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(3, cfg.vocab, (48,)).astype(np.int32)
+               for _ in range(3)]
+
+    def timed(engine):
+        engine.serve(make_requests(prompts, 6), max_decode_batch=4)  # warm
+        t0 = time.perf_counter()
+        engine.serve(make_requests(prompts, 6), max_decode_batch=4)
+        return time.perf_counter() - t0
+
+    t_off = timed(Engine(model, p, method="quoka"))
+    t_on = timed(Engine(model, p, method="quoka", registry=Registry()))
+    assert t_on <= 5.0 * t_off + 1.0, (t_on, t_off)
+
+
+# ---------------------------------------------------------------------------
+# in-jit obs contract
+# ---------------------------------------------------------------------------
+
+def test_prefill_chunk_obs_pytree_contract(smoke_model):
+    from repro.core import plan as plan_mod
+    cfg, model, p = smoke_model
+    t = cfg.quoka.chunk_size
+    tok = (np.arange(t, dtype=np.int32) % cfg.vocab)[None]
+    last0, _ = model.prefill_chunk(p, {"tokens": tok}, 0,
+                                   model.init_cache(1, 128), "quoka")
+    last1, _, obs = model.prefill_chunk(p, {"tokens": tok}, 0,
+                                        model.init_cache(1, 128), "quoka",
+                                        with_obs=True)
+    np.testing.assert_array_equal(np.asarray(last0), np.asarray(last1))
+    assert isinstance(obs, plan_mod.LayerObs)
+    n_layers = obs.sel_tokens.shape
+    assert obs.sel_tokens.ndim == 1 and n_layers[0] >= 1
+    for leaf in obs:
+        assert leaf.shape == n_layers and leaf.dtype == np.float32
+
+
+# ---------------------------------------------------------------------------
+# generate() compile-time exclusion (benchmark-timing bugfix)
+# ---------------------------------------------------------------------------
+
+def test_generate_first_call_excludes_compile(smoke_model):
+    """The TTFT clock must start AFTER a warmup execution on identical
+    avals: mechanism-based check — the first generate() runs the jitted
+    prefill twice (warmup + timed), repeat calls on the same signature
+    exactly once."""
+    cfg, model, p = smoke_model
+    eng = Engine(model, p, method="full")
+    calls = []
+    real = eng._prefill
+    eng._prefill = lambda *a: (calls.append(1), real(*a))[1]
+    toks = (np.arange(32, dtype=np.int32) % cfg.vocab)[None]
+    batch = eng.pad_prompt(toks)
+    r1 = eng.generate(batch, 3)
+    assert len(calls) == 2, "first call must warm the jit cache off-clock"
+    assert eng._warmed                           # signature recorded
+    r2 = eng.generate(batch, 3)
+    assert len(calls) == 3, "warmed signature must skip the warmup pass"
+    np.testing.assert_array_equal(r1.tokens, r2.tokens)
+    # a NEW signature (different max_new class / shape) warms again
+    eng.generate(batch, 1)
+    assert len(calls) == 5
