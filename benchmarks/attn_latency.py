@@ -8,11 +8,34 @@ This container is a CPU host, matching the paper's Intel-Xeon setting
 interpreted Pallas backend executes the kernel body per grid cell in Python
 — it validates the dispatch path, not kernel speed — so it only runs at the
 shortest length (`INTERPRET_MAX_T`).
+
+Besides the end-to-end sweep, a per-STAGE breakdown runs at the last-chunk
+geometry of ``STAGE_T`` (the hardest selection: chunk queries against the
+full prior cache): score (plan build), materialize (budget gather) and
+attend are timed as separate jitted calls — stage wall times are only
+observable at dispatch granularity — and recorded per arm:
+
+  staged  ``fused=False``: stage_mat_attend_us = the materialize call
+          followed by the attend call (two dispatches + the materialized
+          ``Selected`` buffers between them — the staged pipeline's cost
+          shape).
+  fused   ``fused=True``: stage_mat_attend_us = ONE ``ops.selected_attention``
+          call straight off the plan indices (stage_materialize_us == 0 by
+          construction); ``mat_attend_ratio`` = fused / staged, measured by
+          PAIRED sampling (per-iteration ratio of back-to-back calls, median
+          — immune to the machine-load drift that independent medians pick
+          up).  This ratio is the regression-gated fused-path headline
+          (benchmarks/baselines/attn_latency.json); absolute stage times are
+          informational.
+
+    PYTHONPATH=src python -m benchmarks.attn_latency [--smoke]
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -20,16 +43,100 @@ import jax.numpy as jnp
 from benchmarks.common import (INTERPRET_MAX_T, backend_axis, emit, header,
                                json_mark, time_fn, write_json)
 from repro.configs.base import QuokaConfig
+from repro.core import plan as plan_mod
 from repro.core.chunked_prefill import chunked_sparse_attention
+from repro.kernels import ops as kops
 
 LENGTHS = (1024, 2048, 4096, 8192)
 METHODS = ("full", "quoka", "sample_attention", "sparq")
 H, NKV, D = 16, 4, 64           # qwen3-4b-ish head geometry (scaled)
 BLOCK_G = 16                    # block-granular selection grid arm
+STAGE_T = 1024                  # per-stage breakdown / fused-gate geometry
 
 
-def run(lengths=LENGTHS):
+def _paired_ratio(fn_a, fn_b, iters: int) -> float:
+    """Median over iterations of (one fn_a call) / (one fn_b call), the
+    calls interleaved back to back so slow drift hits both sides of every
+    ratio equally."""
+    ratios = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        ta = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        ratios.append(ta / (time.perf_counter() - t0))
+    ratios.sort()
+    return ratios[len(ratios) // 2]
+
+
+def _stage_breakdown(key, t: int, backend: str):
+    """Score / materialize / attend wall times at the last-chunk geometry,
+    staged vs fused, on one backend leg."""
+    cfg = QuokaConfig(chunk_size=128, budget=1024, n_queries=16,
+                      granularity=BLOCK_G, backend=backend)
+    chunk = cfg.chunk_size
+    q = jax.random.normal(key, (1, t, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, t, NKV, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, t, NKV, D))
+    pos = jnp.arange(t, dtype=jnp.int32)[None]
+    start = jnp.asarray(t - chunk, jnp.int32)
+    qc, kc, vc = q[:, t - chunk:], k[:, t - chunk:], v[:, t - chunk:]
+    g = plan_mod.grid(cfg)
+    iters = 3 if backend == "pallas_interpret" else 9
+
+    build_j = jax.jit(functools.partial(plan_mod.build, "quoka", cfg=cfg))
+    pln = jax.block_until_ready(build_j(qc, k, pos, start))
+    mat_j = jax.jit(functools.partial(plan_mod.materialize, cfg=cfg))
+    sel = jax.block_until_ready(mat_j(pln, k, v, pos, start))
+    boundary = sel.pos.shape[-1]
+
+    def attend(sel_k, sel_v, sel_pos, qc, kc, vc):
+        b = qc.shape[0]
+        k_cat = jnp.concatenate([sel_k, kc], axis=1)
+        v_cat = jnp.concatenate([sel_v, vc], axis=1)
+        k_valid = jnp.concatenate(
+            [sel_pos >= 0, jnp.ones((b, NKV, chunk), bool)], axis=-1)
+        return kops.attention(qc, k_cat, v_cat, k_valid, causal=True,
+                              boundary=boundary, backend=backend)
+
+    att_j = jax.jit(attend)
+    fused_j = jax.jit(functools.partial(
+        kops.selected_attention, granularity=g, backend=backend, cfg=cfg))
+
+    def staged_mat_attend():
+        s = mat_j(pln, k, v, pos, start)
+        return att_j(s.k, s.v, s.pos, qc, kc, vc)
+
+    def fused_mat_attend():
+        return fused_j(qc, k, v, pos, pln.idx, start)
+
+    score_us = time_fn(build_j, qc, k, pos, start, warmup=1, iters=iters)
+    mat_us = time_fn(mat_j, pln, k, v, pos, start, warmup=1, iters=iters)
+    att_us = time_fn(att_j, sel.k, sel.v, sel.pos, qc, kc, vc,
+                     warmup=1, iters=iters)
+    staged_us = time_fn(staged_mat_attend, warmup=1, iters=iters)
+    fused_us = time_fn(fused_mat_attend, warmup=1, iters=iters)
+    ratio = _paired_ratio(fused_mat_attend, staged_mat_attend, iters)
+
+    common = dict(bench="attn_latency", scenario="stage", seq_len=t,
+                  backend=backend, method="quoka", granularity=BLOCK_G,
+                  reuse_interval=1)
+    emit(f"attn_latency/stage/T{t}/{backend}/staged",
+         score_us + staged_us, f"mat+attend={staged_us:.0f}us",
+         fused=False, stage_score_us=score_us, stage_materialize_us=mat_us,
+         stage_attend_us=att_us, stage_mat_attend_us=staged_us, **common)
+    emit(f"attn_latency/stage/T{t}/{backend}/fused",
+         score_us + fused_us, f"fused/staged={ratio:.3f}",
+         fused=True, stage_score_us=score_us, stage_materialize_us=0.0,
+         stage_attend_us=fused_us, stage_mat_attend_us=fused_us,
+         mat_attend_ratio=ratio, **common)
+
+
+def run(lengths=LENGTHS, smoke: bool = False):
     header("attn_latency (Fig 5a/c)")
+    if smoke:
+        lengths = (STAGE_T,)
     mark = json_mark()
     key = jax.random.PRNGKey(0)
     cfg = QuokaConfig(chunk_size=128, budget=1024, n_queries=16)
@@ -56,24 +163,43 @@ def run(lengths=LENGTHS):
                     base_us = us
                 derived = f"speedup={base_us/us:.2f}x" if base_us else ""
                 emit(f"attn_latency/T{t}/{backend}/{m}", us, derived,
-                     bench="attn_latency", seq_len=t, backend=backend,
-                     method=m, granularity=1, reuse_interval=1)
+                     bench="attn_latency", scenario="e2e", seq_len=t,
+                     backend=backend, method=m, granularity=1,
+                     reuse_interval=1, fused=False)
             if backend == "xla":
-                # block-granular quoka arm (SelectionPlan on a 16-token
-                # grid); the gated baselines pin granularity=1, this arm
-                # tracks the contiguous-gather trajectory
-                cfg_blk = dataclasses.replace(cfg, granularity=BLOCK_G)
-                fn = jax.jit(functools.partial(
-                    chunked_sparse_attention, cfg=cfg_blk, method="quoka",
-                    backend=backend))
-                us = time_fn(fn, q, k, v, warmup=1, iters=iters)
-                derived = f"speedup={base_us/us:.2f}x" if base_us else ""
-                emit(f"attn_latency/T{t}/{backend}/quoka_g{BLOCK_G}", us,
-                     derived, bench="attn_latency", seq_len=t,
-                     backend=backend, method="quoka", granularity=BLOCK_G,
-                     reuse_interval=1)
+                # block-granular quoka arms (SelectionPlan on a 16-token
+                # grid), staged vs fused-routed; the gated baselines pin
+                # granularity=1, these arms track the contiguous-gather
+                # and gather-free trajectories
+                for fused in (False, True):
+                    cfg_blk = dataclasses.replace(
+                        cfg, granularity=BLOCK_G, fused_select_attn=fused)
+                    fn = jax.jit(functools.partial(
+                        chunked_sparse_attention, cfg=cfg_blk,
+                        method="quoka", backend=backend))
+                    us = time_fn(fn, q, k, v, warmup=1, iters=iters)
+                    derived = f"speedup={base_us/us:.2f}x" if base_us else ""
+                    label = f"quoka_g{BLOCK_G}" + ("_fused" if fused else "")
+                    emit(f"attn_latency/T{t}/{backend}/{label}", us,
+                         derived, bench="attn_latency", scenario="e2e",
+                         seq_len=t, backend=backend, method="quoka",
+                         granularity=BLOCK_G, reuse_interval=1, fused=fused)
+        if t == STAGE_T:
+            for backend in backend_axis():
+                if backend == "pallas_interpret" and t > INTERPRET_MAX_T:
+                    continue
+                _stage_breakdown(jax.random.fold_in(key, 7), t, backend)
     write_json("attn_latency", mark)
 
 
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="T=1024 only (the regression-gated stage geometry) "
+                         "for the fast CI tier")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+
+
 if __name__ == "__main__":
-    run()
+    main()

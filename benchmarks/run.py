@@ -95,7 +95,7 @@ def main() -> None:
                             serving_throughput, ttft)
     smoke = {"smoke": True} if args.smoke else {}
     todo = {
-        "attn_latency": attn_latency.run,
+        "attn_latency": lambda: attn_latency.run(**smoke),
         "ttft": lambda: ttft.run(**smoke),
         "decode_latency": decode_latency.run,
         "accuracy_proxy": accuracy_proxy.run,

@@ -94,14 +94,14 @@ def _prefix_reuse(eng, cfg, *, smoke: bool, seed: int, mesh_label: str):
          f"ttft={ttft_cold*1e3:.1f}ms", bench="serving_throughput",
          scenario="prefix_reuse", mode="cold", method=eng.method,
          mesh=mesh_label, granularity=cfg.quoka.granularity,
-         reuse_interval=cfg.quoka.reuse_interval,
+         reuse_interval=cfg.quoka.reuse_interval, fused=eng.fused,
          ttft_mean_s=ttft_cold, tokens_per_s=cold.tokens_per_s,
          n_requests=n_requests, prompt_len=sys_len + sfx_len)
     emit("serving/prefix_reuse/cached", ttft_hot * 1e6,
          f"speedup={speedup:.2f}x", bench="serving_throughput",
          scenario="prefix_reuse", mode="cached", method=eng.method,
          mesh=mesh_label, granularity=cfg.quoka.granularity,
-         reuse_interval=cfg.quoka.reuse_interval,
+         reuse_interval=cfg.quoka.reuse_interval, fused=eng.fused,
          ttft_mean_s=ttft_hot, tokens_per_s=hot.tokens_per_s,
          ttft_speedup=speedup, hit_rate=eng.stats["hit_rate"],
          evictions=eng.stats["evictions"],
@@ -116,15 +116,20 @@ def _granularity_scenario(cfg, params, prompts, arrivals, serve_kw, max_new,
                           *, mesh, mesh_label):
     """Serving TTFT, token-granular vs block-granular + cross-layer-reuse
     selection plans (block size == selection grid == B_CP, so a block plan
-    is a sub-view of the paged pool's block table).  Informational: the
-    absolute TTFTs are runner-speed-bound; the gated baselines stay pinned
-    to granularity=1."""
+    is a sub-view of the paged pool's block table), plus the block plan
+    re-served over the gather-free fused kernel route
+    (``QuokaConfig.fused_select_attn``; kernels/selected_attention.py).
+    Informational: the absolute TTFTs are runner-speed-bound; the gated
+    baselines stay pinned to granularity=1."""
     chunk = cfg.quoka.chunk_size
     p50 = {}
     for label, quoka_kw in (("token_plan", dict(granularity=1,
                                                 reuse_interval=1)),
                             ("block_plan", dict(granularity=chunk,
-                                                reuse_interval=2))):
+                                                reuse_interval=2)),
+                            ("block_plan_fused",
+                             dict(granularity=chunk, reuse_interval=2,
+                                  fused_select_attn=True))):
         cfg_v = dataclasses.replace(
             cfg, quoka=dataclasses.replace(cfg.quoka, **quoka_kw))
         eng = Engine(build_model(cfg_v), params, method="quoka", mesh=mesh)
@@ -138,6 +143,7 @@ def _granularity_scenario(cfg, params, prompts, arrivals, serve_kw, max_new,
              scenario="granularity", mode=label, method="quoka",
              mesh=mesh_label, granularity=quoka_kw["granularity"],
              reuse_interval=quoka_kw["reuse_interval"],
+             fused=quoka_kw.get("fused_select_attn", False),
              ttft_p50_s=p50[label], tokens_per_s=res.tokens_per_s,
              n_requests=len(prompts))
     ratio = p50["block_plan"] / max(p50["token_plan"], 1e-9)
@@ -231,7 +237,7 @@ def run(*, smoke: bool = False, method: str = "quoka", seed: int = 0,
          f"tps={res.tokens_per_s:.1f}", bench="serving_throughput",
          mode="continuous", method=method, mesh=mesh_label,
          granularity=cfg.quoka.granularity,
-         reuse_interval=cfg.quoka.reuse_interval,
+         reuse_interval=cfg.quoka.reuse_interval, fused=eng.fused,
          tokens_per_s=res.tokens_per_s,
          ttft_p50_s=float(np.percentile(cont_ttft, 50)),
          ttft_p99_s=float(np.percentile(cont_ttft, 99)),
@@ -242,7 +248,7 @@ def run(*, smoke: bool = False, method: str = "quoka", seed: int = 0,
          f"tps={seq_tps:.1f}", bench="serving_throughput",
          mode="sequential", method=method, mesh=mesh_label,
          granularity=cfg.quoka.granularity,
-         reuse_interval=cfg.quoka.reuse_interval,
+         reuse_interval=cfg.quoka.reuse_interval, fused=eng.fused,
          tokens_per_s=seq_tps,
          ttft_p50_s=float(np.percentile(seq_ttft, 50)),
          ttft_p99_s=float(np.percentile(seq_ttft, 99)),

@@ -88,6 +88,31 @@ def gather_slice_sizes(hlo_text: str):
             for m in _GATHER_RE.finditer(hlo_text)]
 
 
+_OP_NAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def gathers_in_scope(hlo_text: str, scope: str):
+    """slice_sizes of every gather whose ``metadata op_name`` contains
+    ``scope`` (a ``jax.named_scope`` label survives into HLO metadata).
+
+    The fused-selected-attention acceptance check uses this to assert that
+    the serving step's lowering contains NO gather under the staged path's
+    "plan_materialize" scope — i.e. the fused kernel really replaced the
+    full-budget KV gather, not merely renamed it.  Callers should first
+    assert the scope IS visible on a staged lowering of the same step, so a
+    metadata-stripping compiler change fails loudly instead of passing
+    vacuously."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _GATHER_RE.search(line)
+        if m is None:
+            continue
+        nm = _OP_NAME_RE.search(line)
+        if nm is not None and scope in nm.group(1):
+            out.append(tuple(int(d) for d in m.group(1).split(",") if d))
+    return out
+
+
 def while_trip_counts(hlo_text: str):
     """Best-effort trip counts of while loops (for FLOP sanity checks)."""
     return [int(m.group(1)) for m in

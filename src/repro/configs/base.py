@@ -118,6 +118,13 @@ class QuokaConfig:
     # dimension before the fused scoring kernel (Loki-style; a cached
     # deterministic projection stands in for offline PCA).  0 = full-dim.
     score_proj_dim: int = 0
+    # gather-free fused selected attention: route block-granular selection
+    # (granularity > 1) onto kernels/selected_attention.py, which streams
+    # each selected KV slab straight from the unmaterialized cache instead
+    # of materialize + attend (core/plan.py::fused_route has the full
+    # dispatch rules; token plans, sliding windows, MLA and active meshes
+    # stay on the staged path).
+    fused_select_attn: bool = False
 
 
 @dataclass(frozen=True)

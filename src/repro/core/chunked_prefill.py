@@ -65,8 +65,18 @@ def chunked_sparse_attention(q, k, v, cfg: QuokaConfig,
     vs = v.reshape(b, nc, bcp, n_kv, d).swapaxes(0, 1)
     ps = pos_all.reshape(b, nc, bcp).swapaxes(0, 1)
 
+    fused = plan_mod.fused_route(cfg, method, k)
+
     def one_chunk(i, qc, kc, vc, pc):
         start = pc[0, 0]
+        if fused:
+            # gather-free path: build the plan and attend straight through
+            # its block ids (kernels/selected_attention.py) — the chunk KV
+            # is read from the full cache view at [start, start + B_CP)
+            pln = plan_mod.build(method, qc, k, pos_all, start, cfg)
+            return kops.selected_attention(
+                qc, k, v, pos_all, pln.idx, start,
+                granularity=plan_mod.grid(cfg), backend=backend, cfg=cfg)
         # the staged plan pipeline (score -> select -> materialize); block
         # plans include boundary-straddling blocks whole and re-mask their
         # not-yet-prior tokens inside materialize

@@ -44,6 +44,8 @@ from repro.core import quoka as qk
 from repro.core import selection as sel_scores
 from repro.core.attention import NEG_INF
 from repro.core.quoka import Selected, prior_context_valid
+from repro.kernels import ops as kops
+from repro.sharding import ctx as shctx
 
 
 class SelectionPlan(NamedTuple):
@@ -463,3 +465,108 @@ def select_with_ctx(ctx, plan, method: str, q, k, v, key_pos, chunk_start,
     ctx["_obs"] = selected_obs(sel.pos, key_pos, chunk_start, bud,
                                refreshed, sketch)
     return sel, plan
+
+
+# ----------------------------------------------------------------------------
+# gather-free fused path (kernels/selected_attention.py)
+# ----------------------------------------------------------------------------
+
+def fused_route(cfg: QuokaConfig, method: str, k,
+                window: Optional[int] = None) -> bool:
+    """Static dispatch rule: may the gather-free fused selected-attention
+    kernel replace the staged materialize + attend pair for this call site?
+
+    The fused kernel streams whole (g, n_kv, d) slabs through its index
+    maps, so it serves exactly the geometries where that is well-defined:
+
+      * ``cfg.fused_select_attn`` opted in (default off — the staged path
+        stays the baseline and every bit-exactness suite keeps its oracle);
+      * block-granular plans only (granularity > 1, head-shared ids) whose
+        grid divides the cache view;
+      * no sliding window (the per-query window constraint cannot be
+        expressed by the kernel's static boundary + per-key masks) — MLA's
+        latent-space selection never reaches this router at all;
+      * no active mesh policy: pallas_call under GSPMD partitioning (and
+        the TP T-local scoring route) stays on the staged path.
+    """
+    if not getattr(cfg, "fused_select_attn", False):
+        return False
+    if window is not None:
+        return False
+    g = grid(cfg)
+    if g <= 1:
+        return False                      # token-slot plans stay staged
+    if k.shape[1] % g:
+        return False
+    if shctx.get_policy()[0] is not None:
+        return False
+    return True
+
+
+def plan_selected_pos(plan: SelectionPlan, key_pos, chunk_start,
+                      cfg: QuokaConfig) -> jax.Array:
+    """Positions-only twin of ``materialize`` for telemetry: the selected
+    positions (-1 = padding) with validity re-derived exactly as
+    materialize derives it, WITHOUT touching K/V.  The fused kernel applies
+    the same masks in-kernel; this keeps ``LayerObs.sel_tokens`` exact
+    while gathering only the (b, T) int32 positions — bytes, not the KV
+    budget the fused path exists to avoid."""
+    b, t = key_pos.shape
+    g = grid(cfg)
+    valid = prior_context_valid(key_pos, chunk_start)
+    if g == 1:
+        top_i = plan.idx                                     # (b, n_kv, B)
+        safe = jnp.maximum(top_i, 0)
+        shape = top_i.shape[:2] + (t,)
+        pos = jnp.take_along_axis(
+            jnp.broadcast_to(key_pos[:, None, :], shape), safe, axis=2)
+        ok = jnp.take_along_axis(
+            jnp.broadcast_to(valid[:, None, :], shape), safe, axis=2)
+        return jnp.where((top_i >= 0) & ok, pos, -1)
+    blocks = jnp.maximum(plan.idx, 0)                        # (b, NB)
+    pos_sel = jnp.take_along_axis(key_pos.reshape(b, t // g, g),
+                                  blocks[:, :, None], axis=1)
+    ok_sel = jnp.take_along_axis(valid.reshape(b, t // g, g),
+                                 blocks[:, :, None], axis=1)
+    good = ok_sel & (plan.idx >= 0)[:, :, None]
+    return jnp.where(good, pos_sel, -1).reshape(b, 1, -1)
+
+
+def fused_attend_with_ctx(ctx, plan, method: str, q, k, v, key_pos,
+                          chunk_start, cfg: QuokaConfig,
+                          budget: Optional[int] = None,
+                          q_valid: Optional[jax.Array] = None):
+    """Fused twin of ``select_with_ctx`` + the block's staged attention:
+    refresh-or-build the plan, then attend straight THROUGH its indices via
+    ``kops.selected_attention`` — no materialize, no [budget | chunk]
+    concat, one kernel launch.  Callers gate on ``fused_route``.
+
+    Returns (att (b, t, h, d), updated plan carry); the obs side-channel
+    contract matches select_with_ctx (``ctx["_obs"]`` from the positions-
+    only gather, so telemetry stays exact without the KV round-trip).
+    """
+    li = ctx.get("layer_idx", 0)
+    be = ctx.get("backend")
+    g = grid(cfg)
+    t = k.shape[1]
+    bud = floor_to_grid(min(budget or sel_scores.resolve_budget(cfg, t), t),
+                        g)
+    if not ctx.get("obs"):
+        pln, plan = refresh(
+            plan, li, cfg,
+            lambda: build(method, q, k, key_pos, chunk_start, cfg,
+                          budget=bud, q_valid=q_valid))
+        att = kops.selected_attention(q, k, v, key_pos, pln.idx,
+                                      chunk_start, granularity=g,
+                                      backend=be, cfg=cfg)
+        return att, plan
+    (pln, sketch), plan, refreshed = refresh_obs(
+        plan, li, cfg,
+        lambda: build_obs(method, q, k, key_pos, chunk_start, cfg,
+                          budget=bud, q_valid=q_valid))
+    att = kops.selected_attention(q, k, v, key_pos, pln.idx, chunk_start,
+                                  granularity=g, backend=be, cfg=cfg)
+    ctx["_obs"] = selected_obs(
+        plan_selected_pos(pln, key_pos, chunk_start, cfg), key_pos,
+        chunk_start, bud, refreshed, sketch)
+    return att, plan

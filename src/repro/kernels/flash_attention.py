@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import autotune
+
 try:  # TPU compiler params are optional on CPU/interpret
     from jax.experimental.pallas import tpu as pltpu
     _SCRATCH = lambda shape, dtype: pltpu.VMEM(shape, dtype)
@@ -90,17 +92,30 @@ def _kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
                      "interpret"))
 def flash_attention_bhtd(q, k, v, k_valid=None, *, causal: bool = True,
                          boundary: int = 0, scale: Optional[float] = None,
-                         block_q: int = 128, block_k: int = 128,
+                         block_q: Optional[int] = None,
+                         block_k: Optional[int] = None,
                          interpret: bool = True):
     """q: (b, h, tq, d); k, v: (b, h_kv, tk, d); k_valid: bool, either
     (b, tk) shared across heads or (b, h_kv, tk) per-KV-head (gathered
     selection budgets differ per KV head).  Shapes are padded to block
-    multiples internally."""
+    multiples internally.
+
+    ``block_q`` / ``block_k`` = None resolve through the autotuner's tuning
+    table (kernels/autotune.py: exact-key table hit, else the deterministic
+    128/128 defaults — the pre-autotuner constants), at trace time."""
     b, h, tq, d = q.shape
     h_kv, tk = k.shape[1], k.shape[2]
     g = h // h_kv
     scale = (d ** -0.5) if scale is None else scale
 
+    tuned = None
+    if block_q is None or block_k is None:
+        tuned = autotune.lookup("flash_attention", t=tk, d=d, n_kv=h_kv,
+                                budget=boundary, g=1)
+        block_q = block_q or tuned["block_q"]
+        block_k = block_k or tuned["block_k"]
+    semantics = tuple(tuned["dimension_semantics"]) if tuned else \
+        ("parallel", "parallel", "parallel", "arbitrary")
     block_q = min(block_q, max(8, 1 << (tq - 1).bit_length()))
     block_k = min(block_k, max(8, 1 << (tk - 1).bit_length()))
     pq = (-tq) % block_q
@@ -128,8 +143,7 @@ def flash_attention_bhtd(q, k, v, k_valid=None, *, causal: bool = True,
     kwargs = {}
     if not interpret and _COMPILER_PARAMS is not None:  # pragma: no cover
         kwargs["compiler_params"] = _COMPILER_PARAMS(
-            dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary"))
+            dimension_semantics=semantics)
     out = pl.pallas_call(
         kernel,
         grid=grid,

@@ -48,6 +48,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_bhtd
 from repro.kernels.quoka_score import quoka_score_bhtd
+from repro.kernels.selected_attention import (selected_attention_bhtd,
+                                              selected_attention_paged)
 
 BACKENDS = ("xla", "pallas_interpret", "pallas")
 _ENV_VAR = "REPRO_BACKEND"
@@ -101,6 +103,126 @@ def attention(q, k, v, k_valid=None, *, causal: bool = True,
             out = flash_attention_bhtd(qt, kt, vt, k_valid, causal=causal,
                                        boundary=boundary, scale=scale,
                                        interpret=(be != "pallas"))
+        return out.transpose(0, 2, 1, 3)
+
+
+def _selected_xla(q, k, v, key_pos, plan_idx, chunk_start, g, scale):
+    """Parity oracle for the fused kernel: materialize the plan with
+    ``take_along_axis`` (the staged path's gather, re-implemented locally —
+    ops must not import core.plan), slice the chunk rows out of the cache,
+    and run ``flash_attention_ref`` over the [budget | chunk] concat."""
+    b, T, n_kv, d = k.shape
+    t = q.shape[1]
+    start = jnp.asarray(chunk_start, jnp.int32)
+    if start.ndim == 0:
+        start = jnp.broadcast_to(start[None], (b,))
+    valid = (key_pos >= 0) & (key_pos < start[:, None])          # (b, T)
+    idx = plan_idx.astype(jnp.int32)
+    if g == 1:
+        if idx.ndim == 2:
+            idx = jnp.broadcast_to(idx[:, None, :], (b, n_kv, idx.shape[1]))
+        safe = jnp.maximum(idx, 0)
+        idx_t = safe.transpose(0, 2, 1)[..., None]               # (b,B,n_kv,1)
+        k_sel = jnp.take_along_axis(k, idx_t, axis=1)
+        v_sel = jnp.take_along_axis(v, idx_t, axis=1)
+        shape = idx.shape[:2] + (T,)
+        pos = jnp.take_along_axis(
+            jnp.broadcast_to(key_pos[:, None, :], shape), safe, axis=2)
+        ok = jnp.take_along_axis(
+            jnp.broadcast_to(valid[:, None, :], shape), safe, axis=2)
+        sel_valid = (idx >= 0) & ok & (pos >= 0)                 # (b,n_kv,B)
+    else:
+        if idx.ndim == 3:
+            idx = idx[:, 0]               # block plans are head-shared
+        nb = idx.shape[1]
+        blocks = jnp.maximum(idx, 0)
+        ib = blocks[:, :, None, None, None]
+        k_sel = jnp.take_along_axis(
+            k.reshape(b, T // g, g, n_kv, d), ib,
+            axis=1).reshape(b, nb * g, n_kv, d)
+        v_sel = jnp.take_along_axis(
+            v.reshape(b, T // g, g, n_kv, d), ib,
+            axis=1).reshape(b, nb * g, n_kv, d)
+        ok_sel = jnp.take_along_axis(valid.reshape(b, T // g, g),
+                                     blocks[:, :, None], axis=1)
+        good = (ok_sel & (idx >= 0)[:, :, None]).reshape(b, nb * g)
+        sel_valid = jnp.broadcast_to(good[:, None, :], (b, n_kv, nb * g))
+    boundary = k_sel.shape[1]
+    # chunk rows are CONTIGUOUS in the cache view (the chunk contract puts
+    # them at [start, start + t), start <= T - t), so a clamped dynamic
+    # slice replaces a per-row gather — the same access the fused kernel's
+    # chunk-walk tiles make
+    slc = jax.vmap(lambda x, s: jax.lax.dynamic_slice_in_dim(x, s, t, 0))
+    k_chunk = slc(k, start)
+    v_chunk = slc(v, start)
+    cpos = slc(key_pos, start)                                   # (b, t)
+    chunk_valid = jnp.broadcast_to((cpos >= 0)[:, None, :], (b, n_kv, t))
+    k_valid = jnp.concatenate([sel_valid, chunk_valid], axis=-1)
+    out = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3),
+        jnp.concatenate([k_sel, k_chunk], axis=1).transpose(0, 2, 1, 3),
+        jnp.concatenate([v_sel, v_chunk], axis=1).transpose(0, 2, 1, 3),
+        causal=True, boundary=boundary, k_valid=k_valid, scale=scale)
+    return out.transpose(0, 2, 1, 3)
+
+
+def _linearize_pool(k_pool, v_pool, pos_pool, table):
+    """Pool leaves -> per-request linear view (the xla oracle's stand-in
+    for the index-map block-table composition).  Unmapped table slots read
+    as empty blocks (pos == -1), mirroring serving/pool.py::gather."""
+    b, nb_t = table.shape
+    bs, n_kv, d = k_pool.shape[1:]
+    safe = jnp.maximum(table, 0)
+    k_lin = k_pool[safe].reshape(b, nb_t * bs, n_kv, d)
+    v_lin = v_pool[safe].reshape(b, nb_t * bs, n_kv, d)
+    pos_lin = jnp.where((table >= 0)[:, :, None], pos_pool[safe],
+                        -1).reshape(b, nb_t * bs)
+    return k_lin, v_lin, pos_lin
+
+
+def selected_attention(q, k, v, key_pos, plan_idx, chunk_start, *,
+                       granularity: int = 1, scale: Optional[float] = None,
+                       backend: Optional[str] = None, cfg=None,
+                       table=None, block_size: int = 0):
+    """Gather-free fused twin of ``plan.materialize`` + ``attention``: one
+    [selected-prefix | causal-chunk] attention straight off the
+    ``SelectionPlan`` indices, with validity re-derived inside the kernel.
+
+    q: (b, t, h, d) chunk queries (BTHD).
+    Linear cache view (default): k, v (b, T, n_kv, d); key_pos (b, T).
+    Paged pool view (``table`` given): k, v (N, block_size, n_kv, d) pool
+      leaves, key_pos (N, block_size), table (b, nb_logical) with -1 =
+      unmapped — the kernel attends THROUGH the block table.
+    plan_idx: (b, B//g) block ids at granularity g > 1; (b, n_kv, B) token
+      slots at g == 1.  chunk_start: () or (b,).
+    Returns (b, t, h, d).
+
+    Dispatch: "xla" is the parity oracle (take_along_axis materialize +
+    flash_attention_ref — it DOES gather, by design); "pallas_interpret" /
+    "pallas" run the scalar-prefetch Pallas kernel
+    (kernels/selected_attention.py) with zero intermediate HBM traffic.
+    """
+    be = resolve_backend(backend, cfg)
+    with jax.named_scope(f"ops_selected_attention_{be}"):
+        if table is not None:
+            if be == "xla":
+                k, v, key_pos = _linearize_pool(k, v, key_pos, table)
+                return _selected_xla(q, k, v, key_pos, plan_idx,
+                                     chunk_start, granularity, scale)
+            out = selected_attention_paged(
+                q.transpose(0, 2, 1, 3), k, v, key_pos, plan_idx,
+                chunk_start, table, granularity=granularity,
+                block_size=block_size, scale=scale,
+                interpret=(be != "pallas"))
+            return out.transpose(0, 2, 1, 3)
+        if be == "xla":
+            return _selected_xla(q, k, v, key_pos, plan_idx, chunk_start,
+                                 granularity, scale)
+        out = selected_attention_bhtd(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), key_pos, plan_idx, chunk_start,
+            granularity=granularity, scale=scale,
+            interpret=(be != "pallas"))
         return out.transpose(0, 2, 1, 3)
 
 

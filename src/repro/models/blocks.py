@@ -177,6 +177,15 @@ class AttnBlock:
                                            causal=True, window=self.window)
             if isinstance(ctx, dict) and ctx.get("obs"):
                 ctx["_obs"] = plan_mod.dense_obs(kv.pos, start)
+        elif plan_mod.fused_route(ctx["qcfg"], method, kv.k,
+                                  window=self.window):
+            # gather-free path: the plan's block ids drive the kernel's
+            # index maps directly — the chunk KV was just written into the
+            # cache above, so the kernel reads it from there rather than
+            # from a [budget | chunk] concat
+            att, plan = plan_mod.fused_attend_with_ctx(
+                ctx, plan, method, q, kv.k, kv.v, kv.pos, start,
+                ctx["qcfg"], budget=budget, q_valid=pos >= 0)
         else:
             sel, plan = plan_mod.select_with_ctx(
                 ctx, plan, method, q, kv.k, kv.v, kv.pos, start,
@@ -587,6 +596,10 @@ class DecCrossBlock:
                                            causal=True)
             if isinstance(ctx, dict) and ctx.get("obs"):
                 ctx["_obs"] = plan_mod.dense_obs(kv.pos, start)
+        elif plan_mod.fused_route(ctx["qcfg"], method, kv.k):
+            att, plan = plan_mod.fused_attend_with_ctx(
+                ctx, plan, method, q, kv.k, kv.v, kv.pos, start,
+                ctx["qcfg"], budget=budget, q_valid=pos >= 0)
         else:
             s, plan = plan_mod.select_with_ctx(
                 ctx, plan, method, q, kv.k, kv.v, kv.pos, start,

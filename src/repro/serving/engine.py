@@ -114,6 +114,16 @@ class Engine:
         self.mesh = mesh
         self.method = method or model.cfg.quoka.method
         self.backend = kops.resolve_backend(backend, model.cfg.quoka)
+        # gather-free serve path: with QuokaConfig.fused_select_attn on and
+        # a block-granular grid, every selecting layer inside the jitted
+        # step functions routes through kernels/selected_attention.py
+        # (core/plan.py::fused_route — the flag rides in via ctx["qcfg"],
+        # no step-function change needed).  The paged gather that builds
+        # the per-request cache VIEW remains (scatter-back needs it); what
+        # the fused path removes is the per-layer full-budget materialize.
+        # Benchmarks stamp this onto their records as the `fused` axis.
+        self.fused = bool(getattr(model.cfg.quoka, "fused_select_attn",
+                                  False))
         self.sampler = sampler
         self.registry = registry if registry is not None else obs_reg.NULL
         self._obs_on = bool(self.registry.enabled)

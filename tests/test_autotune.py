@@ -1,0 +1,144 @@
+"""Autotuner round-trip, lookup determinism and tuning-table lint
+(kernels/autotune.py)."""
+import json
+
+import pytest
+
+from repro.kernels import autotune
+
+
+@pytest.fixture
+def scratch_table(tmp_path, monkeypatch):
+    """Point the active table at an empty scratch file and drop the
+    in-process cache on both sides of the test."""
+    path = tmp_path / "tuning.json"
+    monkeypatch.setenv("REPRO_TUNING", str(path))
+    autotune.invalidate_cache()
+    yield str(path)
+    autotune.invalidate_cache()
+
+
+def test_lookup_defaults_deterministic(scratch_table):
+    a = autotune.lookup("flash_attention", t=333, d=48, n_kv=3, budget=17)
+    b = autotune.lookup("flash_attention", t=333, d=48, n_kv=3, budget=17)
+    assert a == b == autotune.default_params("flash_attention", {})
+
+
+def test_roundtrip_miss_searches_then_hits(scratch_table):
+    key = dict(t=256, d=32, n_kv=2, budget=64, g=16, backend="cpu")
+    calls = []
+
+    def measure(params):
+        calls.append(dict(params))
+        # prefer a non-default geometry so the hit is distinguishable
+        return 1e-3 if params["block_q"] == 64 else 2e-3
+
+    s0, h0 = autotune.SEARCHES, autotune.HITS
+    won = autotune.autotune("selected_attention", measure, **key)
+    assert autotune.SEARCHES == s0 + 1
+    assert len(calls) > 1                       # the search really ran
+    assert won["block_q"] == 64
+
+    # persisted: the scratch table now holds exactly this entry
+    with open(scratch_table) as f:
+        doc = json.load(f)
+    assert doc["schema_version"] == autotune.SCHEMA_VERSION
+    assert len(doc["entries"]) == 1
+    assert doc["entries"][0]["key"]["t"] == 256
+    assert autotune.lint(scratch_table) == []
+
+    # second invocation, same key: table hit, NO re-search, no measuring
+    calls.clear()
+    again = autotune.autotune("selected_attention", measure, **key)
+    assert again == won
+    assert autotune.SEARCHES == s0 + 1          # unchanged
+    assert autotune.HITS == h0 + 1
+    assert calls == []
+
+    # a cold process (cache dropped) re-reads the persisted file as a hit
+    autotune.invalidate_cache()
+    assert autotune.lookup("selected_attention", **key) == won
+
+
+def test_autotune_survives_infeasible_candidates(scratch_table):
+    def measure(params):
+        if params["block_k"] != 128:
+            raise ValueError("infeasible geometry")
+        return 1e-3
+
+    won = autotune.autotune("flash_attention", measure, t=128, d=32, n_kv=2,
+                            backend="cpu")
+    assert won["block_k"] == 128
+
+
+def test_autotune_rejects_unknown_kernel(scratch_table):
+    with pytest.raises(ValueError, match="unknown kernel"):
+        autotune.autotune("nope", lambda p: 1.0, t=8, d=8, n_kv=1)
+
+
+def test_committed_table_lints_clean():
+    assert autotune.lint(autotune.DEFAULT_TABLE) == []
+
+
+def test_lint_catches_bad_entries(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({
+        "schema_version": autotune.SCHEMA_VERSION,
+        "entries": [
+            {"kernel": "flash_attention",
+             "key": {"backend": "cpu", "t": 128, "d": 64, "n_kv": 2,
+                     "budget": 0, "g": 1},
+             "params": {"block_q": 0, "block_k": 128, "num_stages": 2,
+                        "dimension_semantics": ["parallel", "bogus"]}},
+            {"kernel": "not_a_kernel", "key": {}, "params": {}},
+        ]}))
+    errs = autotune.lint(str(bad))
+    assert any("block_q" in e for e in errs)
+    assert any("dimension_semantics" in e for e in errs)
+    assert any("unknown kernel" in e for e in errs)
+
+
+def test_lint_flags_duplicate_keys(tmp_path):
+    entry = {"kernel": "flash_attention",
+             "key": {"backend": "cpu", "t": 128, "d": 64, "n_kv": 2,
+                     "budget": 0, "g": 1},
+             "params": {"block_q": 128, "block_k": 128, "num_stages": 2,
+                        "dimension_semantics": ["parallel", "arbitrary"]}}
+    dup = tmp_path / "dup.json"
+    dup.write_text(json.dumps({"schema_version": autotune.SCHEMA_VERSION,
+                               "entries": [entry, entry]}))
+    assert any("duplicate" in e for e in autotune.lint(str(dup)))
+
+
+def test_flash_attention_consults_table(scratch_table):
+    """flash_attention_bhtd with unpinned block sizes resolves through the
+    active table: a committed entry changes the traced geometry, defaults
+    keep the pre-autotuner behaviour."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ref
+    from repro.kernels.flash_attention import flash_attention_bhtd
+
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 2, 64, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 96, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 96, 16))
+
+    out_default = flash_attention_bhtd(q, k, v, causal=True)
+    entry = {"kernel": "flash_attention",
+             "key": {"backend": "cpu", "t": 96, "d": 16, "n_kv": 2,
+                     "budget": 0, "g": 1},
+             "params": {"block_q": 32, "block_k": 32, "num_stages": 2,
+                        "dimension_semantics": ["parallel", "parallel",
+                                                "parallel", "arbitrary"]}}
+    with open(scratch_table, "w") as f:
+        json.dump({"schema_version": autotune.SCHEMA_VERSION,
+                   "entries": [entry]}, f)
+    autotune.invalidate_cache()
+    out_tuned = flash_attention_bhtd(q, k, v, causal=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    for out in (out_default, out_tuned):
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
