@@ -37,6 +37,12 @@ perf-trajectory artifact.  A GATED metric whose records are missing from
 ``--update`` rewrites the committed ``baseline`` values from the current
 ``out/`` JSONs (tolerances and floors are kept) — run it on an intended
 perf change and commit the refreshed baselines with it.
+
+Records that NO metric selects (and out/ benches with no baseline file)
+are reported as GitHub ``::warning`` annotations instead of passing
+silently, and when ``$GITHUB_STEP_SUMMARY`` is set the per-metric results
+are appended there as a markdown table (the nightly workflow surfaces it
+on the run page).
 """
 from __future__ import annotations
 
@@ -78,6 +84,39 @@ def _value(records: List[Dict], metric: Dict) -> Optional[float]:
     return val
 
 
+def _ungated(records: List[Dict], metrics: List[Dict]) -> List[str]:
+    """Record names in ``records`` that NO metric's ``match`` (or
+    ``ratio_to``) selects — scenarios that run in CI but whose results
+    nothing gates.  Such records used to pass silently; they are surfaced
+    as ``::warning`` annotations so a new benchmark scenario cannot land
+    without either a baseline entry or an explicit decision to skip one."""
+    gated = set()
+    for m in metrics:
+        for sel in (m.get("match"), m.get("ratio_to")):
+            if sel:
+                gated.update(id(r) for r in _select(records, sel))
+    return sorted({r.get("name", "<unnamed>") for r in records
+                   if id(r) not in gated})
+
+
+def _write_summary(rows: List[Dict]) -> None:
+    """Markdown regression table appended to ``$GITHUB_STEP_SUMMARY`` when
+    the env var is set (GitHub renders it on the workflow run page)."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path or not rows:
+        return
+    with open(path, "a") as f:
+        f.write("## Benchmark regression gate\n\n")
+        f.write("| status | metric | value | baseline | notes |\n")
+        f.write("|---|---|---|---|---|\n")
+        for r in rows:
+            mark = {"ok": "✅", "info": "ℹ️",
+                    "FAIL": "❌"}.get(r["status"], r["status"])
+            f.write(f"| {mark} {r['status']} | {r['bench']}/{r['name']} "
+                    f"| {r['value']} | {r['baseline']} "
+                    f"| {'; '.join(r['reasons'])} |\n")
+
+
 def _check(metric: Dict, value: Optional[float]) -> List[str]:
     """Failure reasons ([] = pass)."""
     if value is None:
@@ -117,6 +156,22 @@ def main() -> int:
         print("no baselines committed; nothing to gate", file=sys.stderr)
         return 1
     failures = 0
+    summary_rows: List[Dict] = []
+    if os.path.isdir(args.out):
+        for extra in sorted(
+                set(f[:-5] for f in os.listdir(args.out)
+                    if f.endswith(".json")) - set(names)):
+            try:
+                recs = _load(os.path.join(args.out, f"{extra}.json"))
+            except (json.JSONDecodeError, OSError):
+                continue
+            # only record lists count — out/ also holds auxiliary JSON
+            # (Chrome traces, trajectory history) that nothing should gate
+            if (isinstance(recs, list) and recs
+                    and all(isinstance(r, dict) and "name" in r
+                            for r in recs)):
+                print(f"::warning title=ungated benchmark::{extra}: output "
+                      f"in {args.out} but no baseline file gates it")
     for bench in names:
         bpath = os.path.join(args.baselines, f"{bench}.json")
         opath = os.path.join(args.out, f"{bench}.json")
@@ -149,10 +204,21 @@ def main() -> int:
             for r in reasons:
                 print(f"     -> {r}")
             failures += bool(reasons) and not info
+            summary_rows.append(dict(status=status, bench=bench,
+                                     name=metric["name"], value=shown,
+                                     baseline=metric["baseline"],
+                                     reasons=reasons))
+        if not args.update:
+            loose = _ungated(records, baseline["metrics"])
+            if loose:
+                print(f"::warning title=ungated benchmark records::{bench}: "
+                      f"{len(loose)} record name(s) matched by no baseline "
+                      f"metric: {', '.join(loose)}")
         if args.update:
             with open(bpath, "w") as f:
                 json.dump(baseline, f, indent=2)
                 f.write("\n")
+    _write_summary(summary_rows)
     if failures:
         print(f"\n{failures} regression(s) beyond tolerance", file=sys.stderr)
         return 1

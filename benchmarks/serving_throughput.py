@@ -12,6 +12,12 @@ prefills only the uncached suffixes — reporting TTFT and tokens/s for
 both, plus the cache hit rate.  The cached/cold TTFT speedup is the
 regression-gated headline (benchmarks/check_regression.py).
 
+A third scenario, ``host_offload``, undersizes the device pool so every
+finished request's prefix blocks are evicted before the trace repeats,
+and compares the re-send's TTFT with the hierarchical pool's host tier on
+(eviction demotes to host memory; the re-send promotes) vs off (the
+re-send prefills cold).  Its TTFT speedup is also regression-gated.
+
     PYTHONPATH=src python -m benchmarks.serving_throughput [--smoke]
 
 Emits JSON to benchmarks/out/serving_throughput.json like attn_latency/ttft.
@@ -109,6 +115,76 @@ def _prefix_reuse(eng, cfg, *, smoke: bool, seed: int, mesh_label: str):
     print(f"# prefix_reuse: cold TTFT {ttft_cold*1e3:.1f} ms -> cached "
           f"{ttft_hot*1e3:.1f} ms = {speedup:.2f}x "
           f"(hit rate {eng.stats['hit_rate']:.2f})", flush=True)
+    return speedup
+
+
+def _host_offload(cfg, params, *, smoke: bool, seed: int, method: str,
+                  mesh_label: str):
+    """Hierarchical-pool scenario: a device pool sized BELOW the trace's
+    working set (every finished request's prefix blocks are evicted before
+    the re-send), served twice — once with the host tier on (eviction
+    demotes, the re-send promotes: cache-hit TTFT) and once without it
+    (eviction destroys, the re-send prefills cold).  The gated headline is
+    the demoted-prefix-hit vs cold-prefill TTFT ratio — what turning
+    eviction from cache loss into tiering is worth."""
+    from repro.serving.pool import blocks_for_request
+    chunk = cfg.quoka.chunk_size
+    plen = 4 * chunk if smoke else 8 * chunk
+    n_requests = 3 if smoke else 6
+    max_new = 4 if smoke else 8
+    rng = np.random.default_rng(seed + 2)
+    prompts = [rng.integers(3, cfg.vocab, (plen,)).astype(np.int32)
+               for _ in range(n_requests)]
+    need = blocks_for_request(plen, max_new, chunk, chunk)
+    # one request's reservation + one spare: serving request k+1 must evict
+    # request k's just-registered prefix blocks
+    kw = dict(block_size=chunk, num_blocks=need + 1, max_decode_batch=1,
+              max_prefill_tokens=2 * chunk)
+    eng = Engine(build_model(cfg), params, method=method)
+    warm = [rng.integers(3, cfg.vocab, (plen,)).astype(np.int32)
+            for _ in range(2)]
+    ttft, stats = {}, {}
+    for label, htb in (("cold", 0),
+                       ("host_tier", (n_requests + 2) * (need + 1))):
+        # compile on a throwaway state (distinct prompts, same geometry;
+        # served twice so the demote AND promote paths are both traced),
+        # then measure pass 2 of a fresh state: pass 1 fills + evicts, the
+        # re-send hits the host tier (or prefills cold without one)
+        wst = eng.make_serve_state(make_requests(prompts, max_new),
+                                   host_tier_blocks=htb, **kw)
+        eng.serve(make_requests(warm, max_new), state=wst)
+        eng.serve(make_requests(warm, max_new), state=wst)
+        st = eng.make_serve_state(make_requests(prompts, max_new),
+                                  host_tier_blocks=htb, **kw)
+        eng.serve(make_requests(prompts, max_new), state=st)
+        res = eng.serve(make_requests(prompts, max_new), state=st)
+        ttft[label] = float(np.mean(list(res.ttft_s.values())))
+        stats[label] = dict(eng.stats)
+    s = stats["host_tier"]
+    assert s["demoted"] > 0 and s["promoted"] > 0, \
+        f"host_offload scenario failed to exercise the tier: {s}"
+    speedup = ttft["cold"] / max(ttft["host_tier"], 1e-9)
+    emit("serving/host_offload/cold", ttft["cold"] * 1e6,
+         f"ttft={ttft['cold']*1e3:.1f}ms", bench="serving_throughput",
+         scenario="host_offload", mode="cold", method=method,
+         mesh=mesh_label, granularity=cfg.quoka.granularity,
+         reuse_interval=cfg.quoka.reuse_interval, fused=False,
+         ttft_mean_s=ttft["cold"], n_requests=n_requests, prompt_len=plen,
+         num_blocks=need + 1)
+    emit("serving/host_offload/host_tier", ttft["host_tier"] * 1e6,
+         f"speedup={speedup:.2f}x", bench="serving_throughput",
+         scenario="host_offload", mode="host_tier", method=method,
+         mesh=mesh_label, granularity=cfg.quoka.granularity,
+         reuse_interval=cfg.quoka.reuse_interval, fused=False,
+         ttft_mean_s=ttft["host_tier"], ttft_speedup=speedup,
+         demoted=s["demoted"], promoted=s["promoted"],
+         staged_used=s["staged_used"], host_evictions=s["host_evictions"],
+         hit_rate=s["hit_rate"], n_requests=n_requests, prompt_len=plen,
+         num_blocks=need + 1)
+    print(f"# host_offload: cold TTFT {ttft['cold']*1e3:.1f} ms -> demoted-"
+          f"prefix hit {ttft['host_tier']*1e3:.1f} ms = {speedup:.2f}x "
+          f"({s['demoted']:.0f} demoted, {s['promoted']:.0f} promoted, "
+          f"{s['staged_used']:.0f} staged)", flush=True)
     return speedup
 
 
@@ -263,6 +339,10 @@ def run(*, smoke: bool = False, method: str = "quoka", seed: int = 0,
 
     prefix_speedup = _prefix_reuse(eng, cfg, smoke=smoke, seed=seed,
                                    mesh_label=mesh_label)
+    host_speedup = None
+    if mesh is None:          # host tier is single-device (pool.py raises)
+        host_speedup = _host_offload(cfg, params, smoke=smoke, seed=seed,
+                                     method=method, mesh_label=mesh_label)
     gran_ratio = None
     if method == "quoka":
         gran_ratio = _granularity_scenario(
@@ -279,6 +359,7 @@ def run(*, smoke: bool = False, method: str = "quoka", seed: int = 0,
             print(f"# telemetry {kind} -> {p}", flush=True)
     return {"continuous_vs_sequential": speedup,
             "prefix_ttft_speedup": prefix_speedup,
+            "host_offload_ttft_speedup": host_speedup,
             "block_vs_token_ttft_p50": gran_ratio}
 
 

@@ -125,6 +125,17 @@ class QuokaConfig:
     # dispatch rules; token plans, sliding windows, MLA and active meshes
     # stay on the staged path).
     fused_select_attn: bool = False
+    # hierarchical KV pool (serving/pool.py): capacity of the host-memory
+    # tier behind the device pool, in blocks.  0 = single-level pool
+    # (pressure-eviction destroys cache entries); > 0 = eviction demotes
+    # registered prefix blocks to pinned host buffers, admission matches
+    # both tiers and promotes host hits back into fresh device blocks.
+    host_tier_blocks: int = 0
+    # max host-tier blocks the engine stages (async H2D) per serve step
+    # ahead of their promotion, ranked by the QUOKA selection-count oracle
+    # (serving/engine.py::_prefetch); 0 disables prefetch (promotions
+    # fall back to copy-at-alloc).
+    prefetch_depth: int = 4
 
 
 @dataclass(frozen=True)

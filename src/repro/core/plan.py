@@ -453,6 +453,7 @@ def select_with_ctx(ctx, plan, method: str, q, k, v, key_pos, chunk_start,
             plan, li, cfg,
             lambda: build(method, q, k, key_pos, chunk_start, cfg,
                           budget=budget, q_valid=q_valid))
+        _note_block_counts(ctx, pln, cfg)
         return materialize(pln, k, v, key_pos, chunk_start, cfg), plan
     t = k.shape[1]
     bud = floor_to_grid(min(budget or sel_scores.resolve_budget(cfg, t), t),
@@ -464,12 +465,48 @@ def select_with_ctx(ctx, plan, method: str, q, k, v, key_pos, chunk_start,
     sel = materialize(pln, k, v, key_pos, chunk_start, cfg)
     ctx["_obs"] = selected_obs(sel.pos, key_pos, chunk_start, bud,
                                refreshed, sketch)
+    _note_block_counts(ctx, pln, cfg)
     return sel, plan
+
+
+def _note_block_counts(ctx, pln: SelectionPlan, cfg: QuokaConfig) -> None:
+    """Leave this layer's ``pool_block_counts`` in ``ctx["_selblk"]`` when
+    the caller asked for the prefetch-oracle side channel
+    (``ctx["selblk"] = (block_size, n_blocks)``) — same pop-from-ctx
+    pattern as ``ctx["_obs"]``; models/stack.py collects it as scan ys."""
+    sb = ctx.get("selblk") if isinstance(ctx, dict) else None
+    if sb is not None:
+        ctx["_selblk"] = pool_block_counts(pln, cfg, sb[0], sb[1])
 
 
 # ----------------------------------------------------------------------------
 # gather-free fused path (kernels/selected_attention.py)
 # ----------------------------------------------------------------------------
+
+def pool_block_counts(plan: SelectionPlan, cfg: QuokaConfig,
+                      block_size: int, n_blocks: int) -> jax.Array:
+    """(b, n_blocks) int32: how many of this plan's selected entries land
+    in each LOGICAL pool block of the request's cache view — the plan's
+    indices read off BEFORE materialize, which is what makes QUOKA's
+    stage-2 output double as the host-tier prefetch oracle (the engine
+    aggregates these into a per-logical-offset hotness ranking that orders
+    which demoted blocks to stage first; see serving/engine.py).
+
+    Token plans (g == 1) map slots to blocks by division; block plans map
+    grid ids through the grid/block ratio.  Padding (-1) drops."""
+    g = grid(cfg)
+    idx = plan.idx
+    if g == 1:
+        flat = idx.reshape(idx.shape[0], -1)       # (b, n_kv * B) slots
+        ids = flat // block_size
+    else:
+        flat = idx                                  # (b, NB) grid ids
+        ids = (flat * g) // block_size
+    ids = jnp.where(flat >= 0, ids, n_blocks)      # padding -> out of range
+    rows = jnp.arange(ids.shape[0], dtype=jnp.int32)[:, None]
+    return jnp.zeros((ids.shape[0], n_blocks), jnp.int32).at[rows, ids].add(
+        1, mode="drop")
+
 
 def fused_route(cfg: QuokaConfig, method: str, k,
                 window: Optional[int] = None) -> bool:
@@ -559,6 +596,7 @@ def fused_attend_with_ctx(ctx, plan, method: str, q, k, v, key_pos,
         att = kops.selected_attention(q, k, v, key_pos, pln.idx,
                                       chunk_start, granularity=g,
                                       backend=be, cfg=cfg)
+        _note_block_counts(ctx, pln, cfg)
         return att, plan
     (pln, sketch), plan, refreshed = refresh_obs(
         plan, li, cfg,
@@ -569,4 +607,5 @@ def fused_attend_with_ctx(ctx, plan, method: str, q, k, v, key_pos,
     ctx["_obs"] = selected_obs(
         plan_selected_pos(pln, key_pos, chunk_start, cfg), key_pos,
         chunk_start, bud, refreshed, sketch)
+    _note_block_counts(ctx, pln, cfg)
     return att, plan

@@ -141,7 +141,9 @@ def run_continuous(model, params, args, mesh=None):
     kw = dict(block_size=args.block_size, num_blocks=args.num_blocks,
               max_prefill_tokens=args.max_prefill_tokens,
               max_decode_batch=args.max_decode_batch,
-              prefix_cache=not args.no_prefix_cache)
+              prefix_cache=not args.no_prefix_cache,
+              host_tier_blocks=args.host_tier_blocks,
+              prefetch_depth=args.prefetch_depth)
     # compile warmup with the REAL step geometry: the jit cache is keyed on
     # max_nb/num_blocks, which derive from the longest prompt and max_new
     longest = max(prompts, key=len)
@@ -169,6 +171,12 @@ def run_continuous(model, params, args, mesh=None):
               f"prompt tokens served from cache ({100 * s['hit_rate']:.1f}%), "
               f"{s['evictions']:.0f} evictions, "
               f"{s['cow_copies']:.0f} COW copies")
+        if "demoted" in s:
+            print(f"{'host tier':10s} {s['demoted']:.0f} demoted, "
+                  f"{s['promoted']:.0f} promoted "
+                  f"({s['staged_used']:.0f} from prefetch staging), "
+                  f"{s['host_evictions']:.0f} host evictions, "
+                  f"{s['host_blocks']:.0f} blocks resident")
     if reg is not None:
         _print_telemetry(reg)
         if args.trace_dir:
@@ -214,6 +222,16 @@ def main():
                     help="KV pool block size (default: chunk_size)")
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="KV pool size (default: fits max-decode-batch)")
+    ap.add_argument("--host-tier-blocks", type=int, default=None,
+                    help="hierarchical pool: host-memory tier capacity in "
+                         "blocks (evicted prefix blocks demote there and "
+                         "stay matchable; 0 disables, default: config). "
+                         "Pair with an undersized --num-blocks to exercise "
+                         "demotion")
+    ap.add_argument("--prefetch-depth", type=int, default=None,
+                    help="host-tier blocks staged (async H2D) per engine "
+                         "step ahead of promotion, ranked by the QUOKA "
+                         "selection-count oracle (default: config)")
     ap.add_argument("--max-prefill-tokens", type=int, default=None,
                     help="prompt tokens packed per engine step "
                          "(default: 4 * chunk_size)")

@@ -208,26 +208,31 @@ class Model:
         )
 
     def _apply_stacks(self, p, x, pos, cache: ModelCache, ctx):
-        """Returns (x, cache, aux, obs): ``obs`` is the per-layer LayerObs
-        aux-stats pytree with (n_layers,) leaves in GLOBAL layer order when
-        ``ctx["obs"]`` is set (core/plan.py), else None."""
+        """Returns (x, cache, aux, obs, sel): ``obs`` is the per-layer
+        LayerObs aux-stats pytree with (n_layers,) leaves in GLOBAL layer
+        order when ``ctx["obs"]`` is set (core/plan.py), else None; ``sel``
+        is the (b, n_blocks) int32 selection-count total over all layers
+        when ``ctx["selblk"]`` is set (the prefetch oracle), else None."""
         new = []
         aux = jnp.zeros((), jnp.float32)
         plan = None           # cross-layer SelectionPlan carry (core/plan.py)
         layer0 = 0            # global layer offset for the reuse schedule
         obs = [] if ctx.get("obs") else None
+        sel = None
         for s, sp, sc in zip(self.stacks, p["stacks"], cache.stacks):
-            x, nc, a, plan, ob = s.apply(sp, x, pos, sc,
-                                         dict(ctx, layer0=layer0), plan=plan)
+            x, nc, a, plan, ob, sb = s.apply(
+                sp, x, pos, sc, dict(ctx, layer0=layer0), plan=plan)
             layer0 += len(s.period) * s.repeats
             new.append(nc)
             aux = aux + a
             if obs is not None:
                 obs.append(ob)
+            if sb is not None:
+                sel = sb if sel is None else sel + sb
         if obs is not None:
             obs = obs[0] if len(obs) == 1 else \
                 jax.tree.map(lambda *ls: jnp.concatenate(ls), *obs)
-        return x, cache._replace(stacks=tuple(new)), aux, obs
+        return x, cache._replace(stacks=tuple(new)), aux, obs, sel
 
     def _build_cross(self, p, cache: ModelCache, enc_out) -> ModelCache:
         """Fill whisper cross-attention KV (vmapped over stacked layers)."""
@@ -273,8 +278,8 @@ class Model:
         def body(carry, inp):
             cch, _ = carry
             xc, pc, sl = inp
-            h, cch, _aux, _ = self._apply_stacks(p, xc, pc, cch,
-                                                 dict(ctx, slot=sl))
+            h, cch, _aux, _, _ = self._apply_stacks(p, xc, pc, cch,
+                                                    dict(ctx, slot=sl))
             return (cch, h[:, -1, :]), None
 
         (cache, last_h), _ = jax.lax.scan(
@@ -285,7 +290,8 @@ class Model:
     def prefill_chunk(self, p, batch: Dict, pos_start, cache: ModelCache,
                       method: Optional[str] = None,
                       backend: Optional[str] = None,
-                      valid_len=None, with_obs: bool = False):
+                      valid_len=None, with_obs: bool = False,
+                      sel_blocks: Optional[Tuple[int, int]] = None):
         """One B_CP chunk through all stacks — the steady-state unit of
         chunked prefill for per-chunk dispatch (continuous batching / the
         production serving path; §Perf: carrying caches through a scan over
@@ -300,7 +306,10 @@ class Model:
         Returns (last VALID hidden (b, d), cache); with ``with_obs=True``
         additionally returns the per-layer ``LayerObs`` aux-stats pytree
         (leaves (n_layers,)) as a third output — extra jit outputs, no host
-        callbacks (the selection computation itself is unchanged)."""
+        callbacks (the selection computation itself is unchanged).
+        ``sel_blocks = (block_size, n_blocks)`` appends the prefetch-oracle
+        selection-count output ((b, n_blocks) int32, summed over layers)
+        after ``obs`` (same extra-jit-output pattern; orthogonal flags)."""
         cfg = self.cfg
         method = method or cfg.quoka.method
         tok = batch["tokens"]
@@ -322,22 +331,31 @@ class Model:
         ctx["slot"] = s
         if with_obs:
             ctx["obs"] = True
-        x, cache, _, obs = self._apply_stacks(p, x, pos, cache, ctx)
+        if sel_blocks is not None:
+            ctx["selblk"] = (int(sel_blocks[0]), int(sel_blocks[1]))
+        x, cache, _, obs, sel = self._apply_stacks(p, x, pos, cache, ctx)
         if valid_len is None:
             last = x[:, -1, :]
         else:
             li = jnp.clip(vl - 1, 0, t - 1)
             last = jnp.take_along_axis(x, li[:, None, None], axis=1)[:, 0, :]
-        return (last, cache, obs) if with_obs else (last, cache)
+        out = (last, cache)
+        if with_obs:
+            out = out + (obs,)
+        if sel_blocks is not None:
+            out = out + (sel,)
+        return out if len(out) > 2 else (last, cache)
 
     def decode_step(self, p, tokens, pos, cache: ModelCache,
                     method: Optional[str] = None,
                     backend: Optional[str] = None,
-                    with_obs: bool = False):
+                    with_obs: bool = False,
+                    sel_blocks: Optional[Tuple[int, int]] = None):
         """One decode step.  tokens: (b,) int32; pos: scalar or (b,)
         (per-request positions under continuous batching).
         Returns (logits (b, V), cache), plus the per-layer ``LayerObs``
-        pytree as a third output when ``with_obs=True`` (see prefill_chunk)."""
+        pytree when ``with_obs=True`` and the (b, n_blocks) selection-count
+        output when ``sel_blocks`` is set (see prefill_chunk; obs first)."""
         cfg = self.cfg
         method = method or cfg.quoka.method
         dt = cfg.compute_dtype
@@ -351,9 +369,16 @@ class Model:
         ctx["slot"] = ps
         if with_obs:
             ctx["obs"] = True
-        x, cache, _, obs = self._apply_stacks(p, x, pos2, cache, ctx)
+        if sel_blocks is not None:
+            ctx["selblk"] = (int(sel_blocks[0]), int(sel_blocks[1]))
+        x, cache, _, obs, sel = self._apply_stacks(p, x, pos2, cache, ctx)
         logits = self._readout(p, x)[:, 0]
-        return (logits, cache, obs) if with_obs else (logits, cache)
+        out = (logits, cache)
+        if with_obs:
+            out = out + (obs,)
+        if sel_blocks is not None:
+            out = out + (sel,)
+        return out if len(out) > 2 else (logits, cache)
 
 
 def build_model(cfg: ModelConfig) -> Model:

@@ -97,7 +97,7 @@ class Stack:
 
     def apply(self, params: Tuple, x, pos, caches: Tuple, ctx, plan=None):
         """Prefill-chunk / decode forward with caches.
-        Returns (x, new_caches, aux, plan, obs) — ``plan`` is the
+        Returns (x, new_caches, aux, plan, obs, sel) — ``plan`` is the
         cross-layer ``PlanCarry`` threaded through the scan when
         KV-selection reuse is on (core/plan.py), passed through untouched
         otherwise.  ``obs`` is a ``LayerObs`` pytree with (n_layers,)
@@ -105,6 +105,11 @@ class Stack:
         each block leaves its per-layer stats in its ctx copy (the MoE
         aux-loss side-channel) and the scan body collects them as ys —
         seven scalars per layer, nothing like the cache-ys trap below.
+        ``sel`` is the prefetch-oracle side channel: when
+        ``ctx["selblk"] = (block_size, n_blocks)`` is set, the (b,
+        n_blocks) int32 sum over this stack's layers of each plan's
+        ``pool_block_counts`` (layers that left none — dense, recurrent —
+        count zero), else None.
 
         Caches live in the scan CARRY and are updated through WINDOWED
         dynamic-update-slices (only the rows a chunk actually writes), not
@@ -120,6 +125,7 @@ class Stack:
         layer0 = int(ctx.get("layer0", 0)) if isinstance(ctx, dict) else 0
         n_period = len(self.blocks)
         obs_on = isinstance(ctx, dict) and bool(ctx.get("obs"))
+        sel_on = isinstance(ctx, dict) and ctx.get("selblk") is not None
 
         def write_back(blk, buf_tree, new_slice, idx):
             """Windowed write of one layer's cache updates into the stacked
@@ -187,26 +193,31 @@ class Stack:
                 pc = None
             p_slice, idx = xs
             new_bufs = []
-            obs_j = []
+            obs_j, sel_j = [], []
             for j, blk in enumerate(self.blocks):
                 h = shctx.shard_activation(h)
                 c_slice = jax.tree.map(
                     lambda l: jax.lax.dynamic_index_in_dim(
                         l, idx, axis=0, keepdims=False), bufs[j])
-                # obs needs a PER-LAYER ctx copy (each layer pops its own
-                # "_obs"); the reuse carry needs one for layer_idx anyway
-                cj = ctx if pc is None and not obs_on else \
+                # obs/sel need a PER-LAYER ctx copy (each layer pops its own
+                # "_obs"/"_selblk"); the reuse carry needs one for layer_idx
+                cj = ctx if pc is None and not obs_on and not sel_on else \
                     dict(ctx, layer_idx=layer0 + idx * n_period + j)
                 h, c_new, a, pc = blk.apply(p_slice[j], h, pos, c_slice, cj,
                                             plan=pc)
                 if obs_on:
                     ob = cj.pop("_obs", None)
                     obs_j.append(plan_mod.nan_obs() if ob is None else ob)
+                if sel_on:
+                    sb = cj.pop("_selblk", None)
+                    sel_j.append(jnp.zeros((h.shape[0], ctx["selblk"][1]),
+                                           jnp.int32) if sb is None else sb)
                 new_bufs.append(write_back(blk, bufs[j], c_new, idx))
                 aux = aux + jnp.asarray(a, jnp.float32)
             out = (h, aux, tuple(new_bufs))
-            ys = jax.tree.map(lambda *ls: jnp.stack(ls), *obs_j) \
-                if obs_on else None
+            ys = (jax.tree.map(lambda *ls: jnp.stack(ls), *obs_j)
+                  if obs_on else None,
+                  jnp.stack(sel_j) if sel_on else None)
             return (out + (pc,) if carry0 is not None else out), ys
 
         idxs = jnp.arange(self.repeats, dtype=jnp.int32)
@@ -218,9 +229,12 @@ class Stack:
             x, aux, caches, plan = out
         else:
             x, aux, caches = out
+        obs_ys, sel_ys = ys
         obs = None
         if obs_on:
             # ys leaves: (repeats, n_period) -> flatten to global layer
             # order within this stack (layer = idx * n_period + j)
-            obs = jax.tree.map(lambda l: l.reshape(-1, *l.shape[2:]), ys)
-        return x, caches, aux, plan, obs
+            obs = jax.tree.map(lambda l: l.reshape(-1, *l.shape[2:]), obs_ys)
+        # (repeats, n_period, b, n_blocks) -> stack total per pool block
+        sel = sel_ys.sum(axis=(0, 1)) if sel_on else None
+        return x, caches, aux, plan, obs, sel

@@ -53,6 +53,10 @@ class ServeState:
     max_nb: int
     b_prefill: int
     b_decode: int
+    host_tier: int = 0            # host-tier capacity (0 = single level)
+    prefetch_depth: int = 0       # max H2D stages dispatched per step
+    hot: Optional[np.ndarray] = None   # (max_nb,) decayed selection counts
+    host_ctr: Tuple = (0, 0, 0, 0)     # last pool tier counters seen
     t0: float = field(default_factory=time.perf_counter)
     steps: int = 0
     prefill_steps: int = 0
@@ -278,10 +282,17 @@ class Engine:
     # continuous batching
     # ------------------------------------------------------------------
     def _continuous_fns(self, block_size: int, max_nb: int, b_prefill: int,
-                        b_decode: int, num_blocks: int):
+                        b_decode: int, num_blocks: int,
+                        sel_on: bool = False):
         """Build (or fetch) the two jitted step functions for one static
-        geometry: gather blocks -> model step -> sample -> scatter back."""
-        sig = (block_size, max_nb, b_prefill, b_decode, num_blocks)
+        geometry: gather blocks -> model step -> sample -> scatter back.
+
+        ``sel_on`` (host tier): the step fns additionally return the plans'
+        per-logical-block selection counts ((rows, max_nb) int32, summed
+        over layers — core/plan.py::pool_block_counts), the live signal the
+        prefetch hook ranks host-tier staging by.  Same extra-jit-output
+        pattern as obs; the sampled tokens are unaffected."""
+        sig = (block_size, max_nb, b_prefill, b_decode, num_blocks, sel_on)
         if sig in self._cont_fns:
             return self._cont_fns[sig]
         from repro.serving import pool as pl
@@ -294,6 +305,7 @@ class Engine:
         # scalars, fetched alongside the sampled tokens); without one they
         # compile exactly as before — bit-identical metrics-off compute
         obs_on = self._obs_on
+        selb = (block_size, max_nb) if sel_on else None
 
         if mesh is not None:
             from repro.sharding import specs as sh
@@ -313,7 +325,8 @@ class Engine:
             cache = constrain(pl.gather(data, table, num_blocks, block_size))
             res = model.prefill_chunk(
                 p, {"tokens": tokens}, start, cache, method,
-                backend=backend, valid_len=vlen, with_obs=obs_on)
+                backend=backend, valid_len=vlen, with_obs=obs_on,
+                sel_blocks=selb)
             last_h, cache = res[0], res[1]
             logits = model._readout(p, last_h[:, None, :])[:, 0]
             tok = sample(logits, key, sampler)
@@ -321,18 +334,19 @@ class Engine:
             touched = pl.touched_blocks(start, wrote, max_nb, block_size)
             data = pl.scatter(data, constrain(cache), table, touched,
                               num_blocks, block_size)
-            return (data, tok, res[2]) if obs_on else (data, tok)
+            return (data, tok) + tuple(res[2:])
 
         def decode_step(p, data, table, tokens, pos, live, key):
             cache = constrain(pl.gather(data, table, num_blocks, block_size))
             res = model.decode_step(p, tokens, pos, cache,
-                                    method, backend=backend, with_obs=obs_on)
+                                    method, backend=backend, with_obs=obs_on,
+                                    sel_blocks=selb)
             logits, cache = res[0], res[1]
             tok = sample(logits, key, sampler)
             touched = pl.touched_blocks(pos, live, max_nb, block_size)
             data = pl.scatter(data, constrain(cache), table, touched,
                               num_blocks, block_size)
-            return (data, tok, res[2]) if obs_on else (data, tok)
+            return (data, tok) + tuple(res[2:])
 
         if mesh is None:
             fns = (jax.jit(prefill_step), jax.jit(decode_step))
@@ -350,7 +364,8 @@ class Engine:
             host = (rep,) * 4
             # `rep` broadcasts over the LayerObs pytree as an out-shardings
             # prefix: the per-layer stats are tiny replicated scalars
-            out_sh = (data_sh, rep) + ((rep,) if obs_on else ())
+            out_sh = (data_sh, rep) + ((rep,) if obs_on else ()) \
+                + ((rep,) if sel_on else ())
             fns = tuple(
                 jax.jit(fn,
                         in_shardings=(self._param_sh, data_sh) + host + (rep,),
@@ -378,10 +393,19 @@ class Engine:
                          num_blocks: Optional[int] = None,
                          max_prefill_tokens: Optional[int] = None,
                          max_decode_batch: int = 8, key=None,
-                         prefix_cache: bool = True) -> ServeState:
+                         prefix_cache: bool = True,
+                         host_tier_blocks: Optional[int] = None,
+                         prefetch_depth: Optional[int] = None) -> ServeState:
         """Size the pool/scheduler for a request trace and compile the two
         step functions (static geometry: chunk width, prefill rows, decode
-        rows, blocks per request)."""
+        rows, blocks per request).
+
+        ``host_tier_blocks`` > 0 turns on the hierarchical pool (demoted
+        prefix blocks stay matchable on a host-memory tier; see
+        serving/pool.py) and compiles the step functions with the
+        selection-count prefetch oracle; ``prefetch_depth`` caps how many
+        host blocks the per-step prefetch hook stages ahead of promotion.
+        Both default from ``QuokaConfig``."""
         from repro.serving.pool import PagedKVCache, max_blocks_bound
         from repro.serving.scheduler import Scheduler
         chunk = self.model.cfg.quoka.chunk_size
@@ -415,16 +439,23 @@ class Engine:
             num_blocks = -(-num_blocks // dp) * dp
             b_p = -(-b_p // dp) * dp
             b_d = -(-b_d // dp) * dp
+        qcfg = self.model.cfg.quoka
+        htb = (int(getattr(qcfg, "host_tier_blocks", 0))
+               if host_tier_blocks is None else int(host_tier_blocks))
+        pfd = (int(getattr(qcfg, "prefetch_depth", 4))
+               if prefetch_depth is None else int(prefetch_depth))
         pool = PagedKVCache(self.model, num_blocks, block_size,
-                            mesh=self.mesh)
+                            mesh=self.mesh, host_tier_blocks=htb)
         sched = Scheduler(pool, chunk, max_prefill_tokens, max_decode_batch,
                           prefix_cache=prefix_cache, prefix_align=align,
                           registry=self.registry)
-        fns = self._continuous_fns(block_size, max_nb, b_p, b_d, num_blocks)
+        fns = self._continuous_fns(block_size, max_nb, b_p, b_d, num_blocks,
+                                   sel_on=htb > 0)
         key = key if key is not None else jax.random.PRNGKey(0)
         return ServeState(pool=pool, sched=sched, fns=fns, key=key,
                           chunk=chunk, max_nb=max_nb, b_prefill=b_p,
-                          b_decode=b_d)
+                          b_decode=b_d, host_tier=htb, prefetch_depth=pfd,
+                          hot=np.zeros((max_nb,), np.float64))
 
     def _record_layer_obs(self, phase: str, lobs) -> None:
         """Feed one step's in-jit ``LayerObs`` pytree (per-layer device
@@ -458,6 +489,61 @@ class Engine:
             if v.size:
                 reg.observe(f"select/{nm}", float(v.mean()))
 
+    def _note_hot(self, state: ServeState, sel, rows: int) -> None:
+        """Fold one step's selection counts ((rows_compiled, max_nb) int32,
+        the extra jit output) into the decayed per-logical-block hotness
+        vector the prefetch hook ranks by.  Exponential decay keeps the
+        ranking tracking the CURRENT working set's selection pattern."""
+        counts = np.asarray(sel)[:rows].astype(np.float64).sum(axis=0)
+        state.hot = 0.5 * state.hot + counts
+
+    def _prefetch(self, state: ServeState) -> None:
+        """Stage upcoming promotions' H2D copies while the step dispatched
+        just above is still computing (double buffering: the copy for step
+        N+1 overlaps step N's compute — the ``pool/h2d_stage`` span nests
+        inside the step span, which is the trace-level proof of overlap).
+
+        The oracle: the next waiting request's host-tier matches, ranked by
+        the decayed QUOKA selection-count hotness of their LOGICAL block
+        offsets (blocks whose positions the scoring pass keeps selecting
+        get their bytes moved first), capped at ``prefetch_depth``.  Purely
+        an ordering hint — promotion in ``alloc_prefix`` falls back to a
+        synchronous-dispatch ``device_put`` for anything unstaged."""
+        pool, sched = state.pool, state.sched
+        if pool.host is None or state.prefetch_depth <= 0 \
+                or not sched.waiting:
+            return
+        r = sched.waiting[0]
+        fulls, tail = pool.match_prefix(r.tokens,
+                                        chain=sched._chain.get(r.rid))
+        cand = [(li, e[1]) for li, e in enumerate(fulls)
+                if isinstance(e, tuple)]
+        if tail is not None and isinstance(tail[0], tuple):
+            cand.append((len(fulls), tail[0][1]))
+        if not cand:
+            return
+        hot = state.hot
+        cand.sort(key=lambda c: -(hot[c[0]] if c[0] < hot.shape[0]
+                                  else 0.0))
+        cand = cand[:state.prefetch_depth]
+        with self.registry.span("pool/h2d_stage", blocks=len(cand)):
+            n = sum(pool.stage(slot) for _, slot in cand)
+        if n:
+            self.registry.count("pool/staged", float(n))
+
+    def _host_counters(self, state: ServeState) -> None:
+        """Registry counters for the tier traffic of this step (deltas of
+        the pool's monotonic totals)."""
+        pool = state.pool
+        cur = (pool.demoted, pool.promoted, pool.host_evictions,
+               pool.staged_used)
+        for name, now_v, prev in zip(
+                ("pool/demoted", "pool/promoted", "pool/host_evictions",
+                 "pool/staged_used"), cur, state.host_ctr):
+            if now_v > prev:
+                self.registry.count(name, float(now_v - prev))
+        state.host_ctr = cur
+
     def step(self, state: ServeState) -> Tuple[int, int]:
         """One engine step: admit, run a mixed chunk-prefill step over up to
         ``max_prefill_tokens`` of pending prompt chunks, then a batched
@@ -475,6 +561,11 @@ class Engine:
             reg.set("sched/active", float(sched.n_active))
             reg.set("pool/occupancy", 1.0 - pool.num_free / pool.num_blocks)
             reg.set("pool/cached_blocks", float(pool.num_cached))
+            if pool.host is not None:
+                reg.set("pool/host_blocks", float(len(pool.host)))
+        if pool.host is not None:
+            self._host_counters(state)
+        sel_at = 2 + (1 if obs else 0)     # extra-output slot (host tier)
 
         rows = sched.pack_prefill()
         if rows:
@@ -492,10 +583,16 @@ class Engine:
                 out = self._call(state.fns[0], self.params, pool.data,
                                  table, tokens, start, vlen, k1)
                 pool.data, tok = out[0], out[1]
+                # prefetch hook: dispatch next-step H2D stages BETWEEN the
+                # step dispatch and the blocking token fetch, so the copies
+                # run under the compute this step already queued
+                self._prefetch(state)
                 tok_np = np.asarray(tok)
             if obs:
                 self._record_layer_obs("prefill", out[2])
                 reg.count("engine/prefill_tokens", float(vlen.sum()))
+            if state.host_tier:
+                self._note_hot(state, out[sel_at], len(rows))
             now = state.now
             for i, (r, ch, st, vl) in enumerate(rows):
                 sched.note_prefilled(r, vl, int(tok_np[i]), now)
@@ -515,10 +612,13 @@ class Engine:
                 out = self._call(state.fns[1], self.params, pool.data,
                                  table, tokens, pos, live, k2)
                 pool.data, tok = out[0], out[1]
+                self._prefetch(state)
                 tok_np = np.asarray(tok)
             if obs:
                 self._record_layer_obs("decode", out[2])
                 reg.count("engine/decode_tokens", float(len(drows)))
+            if state.host_tier:
+                self._note_hot(state, out[sel_at], len(drows))
             now = state.now
             for i, r in enumerate(drows):
                 sched.note_decoded(r, int(tok_np[i]), now)
@@ -535,6 +635,8 @@ class Engine:
               max_prefill_tokens: Optional[int] = None,
               max_decode_batch: Optional[int] = None, key=None,
               prefix_cache: Optional[bool] = None,
+              host_tier_blocks: Optional[int] = None,
+              prefetch_depth: Optional[int] = None,
               state: Optional[ServeState] = None) -> ServeResult:
         """Serve a request trace with continuous batching.
 
@@ -564,10 +666,13 @@ class Engine:
                 max_decode_batch=(8 if max_decode_batch is None
                                   else max_decode_batch), key=key,
                 prefix_cache=(True if prefix_cache is None
-                              else prefix_cache))
+                              else prefix_cache),
+                host_tier_blocks=host_tier_blocks,
+                prefetch_depth=prefetch_depth)
         elif (block_size is not None or num_blocks is not None
               or max_prefill_tokens is not None or key is not None
-              or max_decode_batch is not None or prefix_cache is not None):
+              or max_decode_batch is not None or prefix_cache is not None
+              or host_tier_blocks is not None or prefetch_depth is not None):
             # silently ignoring these would e.g. report cache-on numbers
             # for a prefix_cache=False A/B pass over a warm state
             raise ValueError(
@@ -594,7 +699,9 @@ class Engine:
         state.occupancy = []
         pool = state.pool
         prefix0 = (pool.lookups, pool.hit_requests, pool.hit_tokens,
-                   pool.prompt_tokens, pool.evictions, pool.cow_copies)
+                   pool.prompt_tokens, pool.evictions, pool.cow_copies,
+                   pool.demoted, pool.promoted, pool.host_evictions,
+                   pool.staged_used)
         pending = sorted(requests, key=lambda r: r.arrival_s)
         state.t0 = time.perf_counter()
         while pending or sched.pending():
@@ -639,6 +746,12 @@ class Engine:
         sc.set("evictions", pool.evictions - prefix0[4])
         sc.set("cow_copies", pool.cow_copies - prefix0[5])
         sc.set("cached_blocks", pool.num_cached)
+        if pool.host is not None:
+            sc.set("demoted", pool.demoted - prefix0[6])
+            sc.set("promoted", pool.promoted - prefix0[7])
+            sc.set("host_evictions", pool.host_evictions - prefix0[8])
+            sc.set("staged_used", pool.staged_used - prefix0[9])
+            sc.set("host_blocks", len(pool.host))
         self.stats = preg.view("serve/prefix")
         if self._obs_on:
             reg = self.registry

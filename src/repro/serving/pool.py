@@ -39,6 +39,22 @@ Prefix caching (multi-turn chats, shared system prompts):
     shared length are pos=-1-stamped — because the sharer must immediately
     write its own suffix into that block.
 
+Hierarchical pool (``host_tier_blocks > 0``): a host-memory tier sits
+behind the device pool, Double Sparsity-style.  Pressure-eviction DEMOTES
+a registered block — content + registration move to a pinned host buffer
+(``jax.device_put`` onto the ``pinned_host`` memory kind where the backend
+has one; on CPU device memory already is host memory) instead of being
+pos=-1-stamped away, so eviction becomes tiering rather than cache loss.
+``match_prefix`` walks the hash chain across BOTH tiers; a host match is
+PROMOTED at allocation time — an async H2D ``jax.device_put`` plus a
+jitted block write into a fresh device block, re-registered on device so
+the next sharer hits HBM directly.  ``stage`` lets the engine dispatch the
+H2D copy for an upcoming promotion ahead of time (double buffering: the
+copy for step N+1 overlaps step N's compute); staged buffers are consumed
+by the promotion that needed them.  A hash is resident in exactly one
+tier at a time (demotion moves it out, promotion/registration moves it
+back), so matching never double-counts content.
+
 Supported cache kinds: linear attention KV ("attn", "attn_moe", enc-free
 GQA) and MLA latent caches.  Recurrent states (mamba/rwkv) do not
 block-decompose over time, whisper cross-KV is encoder-owned, and
@@ -103,11 +119,72 @@ def _chain_hashes(tokens: np.ndarray, block_size: int) -> List[int]:
     return out
 
 
+def _host_placement():
+    """Placement fn for demoted block slabs: pinned host memory where the
+    backend exposes the ``pinned_host`` memory kind (H2D from pinned pages
+    is what lets ``jax.device_put`` overlap compute on GPU/TPU); on CPU the
+    device memory already IS host memory, so slabs stay where they are; any
+    other backend without the memory kind falls back to numpy."""
+    try:
+        mem = jax.devices()[0].memory("pinned_host")
+        return lambda slab: jax.device_put(slab, mem)
+    except Exception:
+        if jax.default_backend() == "cpu":
+            return lambda slab: slab
+        return lambda slab: jax.tree.map(np.asarray, slab)
+
+
+class HostTier:
+    """Slot-addressed host-memory store of demoted block slabs + LRU.
+
+    Pure storage: registration metadata and the cross-tier hash indices
+    stay on ``PagedKVCache`` (mirroring the device tier's ``_reg``/
+    ``_full``/``_tail``) so ``check_invariants`` covers both tiers in one
+    place.  The pool drives eviction: ``oldest()`` names the victim, the
+    pool unregisters it, then ``drop`` releases the slot."""
+
+    def __init__(self, capacity: int):
+        self.capacity = int(capacity)
+        self._free: List[int] = list(range(self.capacity))
+        self._slabs: Dict[int, object] = {}
+        self._lru: "OrderedDict[int, None]" = OrderedDict()
+        self._place = _host_placement()
+
+    def __len__(self) -> int:
+        return len(self._slabs)
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def oldest(self) -> int:
+        return next(iter(self._lru))
+
+    def put(self, slab) -> int:
+        """Store one block slab (caller ensured a free slot)."""
+        slot = self._free.pop()
+        self._slabs[slot] = self._place(slab)
+        self._lru[slot] = None                     # MRU end
+        return slot
+
+    def get(self, slot: int):
+        return self._slabs[slot]
+
+    def touch(self, slot: int) -> None:
+        self._lru.move_to_end(slot)
+
+    def drop(self, slot: int) -> None:
+        del self._slabs[slot]
+        del self._lru[slot]
+        self._free.append(slot)
+
+
 class PagedKVCache:
     """Fixed-size-block KV pool + per-request block tables + free-list +
     content-addressed prefix cache (refcounts, LRU eviction, COW tails)."""
 
-    def __init__(self, model, num_blocks: int, block_size: int, mesh=None):
+    def __init__(self, model, num_blocks: int, block_size: int, mesh=None,
+                 host_tier_blocks: int = 0):
         kinds = [k for s in model.stacks for k in s.period]
         bad = sorted(set(k for k in kinds if k in _UNSUPPORTED_KINDS))
         if bad:
@@ -116,6 +193,10 @@ class PagedKVCache:
                 f"model has unsupported block kinds {bad}")
         if model.cfg.family == "vlm":
             raise ValueError("paged KV pool does not support VLM frontends")
+        if host_tier_blocks and mesh is not None:
+            raise ValueError(
+                "host tier + mesh is not supported yet: demotion would "
+                "have to gather a sharded block slab per eviction")
         self.model = model
         self.mesh = mesh
         self.num_blocks = int(num_blocks)
@@ -138,6 +219,14 @@ class PagedKVCache:
         self._reg: Dict[int, Tuple] = {}            # block -> registration
         self._full: Dict[int, int] = {}             # chain hash -> block
         self._tail: Dict[int, int] = {}             # prefix hash -> block
+        # ---- host tier (hierarchical pool; see module docstring;
+        # mesh-incompatibility guarded at the top of __init__) ----
+        self.host: Optional[HostTier] = (HostTier(host_tier_blocks)
+                                         if host_tier_blocks else None)
+        self._h_reg: Dict[int, Tuple] = {}          # host slot -> registration
+        self._h_full: Dict[int, int] = {}           # chain hash -> host slot
+        self._h_tail: Dict[int, int] = {}           # prefix hash -> host slot
+        self._staged: Dict[int, object] = {}        # host slot -> device slab
         # ---- counters (Engine.stats / ServeResult.prefix) ----
         self.evictions = 0
         self.cow_copies = 0
@@ -145,8 +234,18 @@ class PagedKVCache:
         self.hit_requests = 0
         self.hit_tokens = 0
         self.prompt_tokens = 0
-        self._stamp_fn = jax.jit(_stamp_blocks, donate_argnums=0)
-        self._cow_fn = jax.jit(_cow_block, donate_argnums=0)
+        self.demoted = 0
+        self.promoted = 0
+        self.host_evictions = 0                     # host-tier cache LOSS
+        self.staged_used = 0                        # promotions from staging
+        # module-level jit singletons: the compiled-executable cache lives
+        # on the WRAPPER, so per-instance jax.jit(...) here would recompile
+        # for every pool (each warm/measure serve state builds its own)
+        self._stamp_fn = _stamp_fn
+        self._cow_fn = _cow_fn
+        self._extract_fn = _extract_fn
+        self._write_fn = _write_fn
+        self._cow_slab_fn = _cow_slab_fn
 
     # ---- free-list bookkeeping ------------------------------------------
     @property
@@ -176,24 +275,42 @@ class PagedKVCache:
         return self.alloc_prefix(rid, n)
 
     def alloc_prefix(self, rid: int, n_total: int,
-                     shared: Sequence[int] = (),
-                     cow: Optional[Tuple[int, int]] = None) -> List[int]:
-        """Build request ``rid``'s table: ``shared`` (refcount-pinned prefix
-        blocks, read-only, logical indices 0..len(shared)) followed by
-        ``n_total - len(shared)`` fresh blocks.  ``cow = (src, keep)``
-        initialises the first fresh block as a copy of block ``src`` with
-        slots >= ``keep`` invalidated (shared partial tail)."""
+                     shared: Sequence = (),
+                     cow: Optional[Tuple] = None) -> List[int]:
+        """Build request ``rid``'s table: ``shared`` prefix entries in
+        logical order followed by the remaining fresh blocks.  An entry is
+        either a physical DEVICE block id (int, refcount-pinned read-only)
+        or ``("host", slot)`` — a host-tier block, PROMOTED here: its slab
+        is written into a fresh device block (the staged H2D buffer when
+        the engine prefetched it, an async ``jax.device_put`` otherwise)
+        and re-registered on device under its hash, so only device-shared
+        entries come for free while promotions consume fresh blocks.
+
+        ``cow = (src, keep)`` initialises the first post-prefix fresh block
+        as a copy of ``src`` — a device block id or ``("host", slot)`` —
+        with slots >= ``keep`` invalidated (shared partial tail).  A host
+        COW source is COPIED, not consumed: the clone is private to the
+        sharer, so the host copy stays matchable."""
         if rid in self._tables:
             raise RuntimeError(f"request {rid} already holds blocks")
-        n_fresh = n_total - len(shared)
-        protect = list(shared) + ([cow[0]] if cow else [])
+        dev_shared = [e for e in shared if not isinstance(e, tuple)]
+        promote = [e[1] for e in shared if isinstance(e, tuple)]
+        cow_host = cow is not None and isinstance(cow[0], tuple)
+        n_fresh = n_total - len(dev_shared)
+        protect = dev_shared + ([cow[0]] if cow and not cow_host else [])
         if not self.can_alloc(n_fresh, exclude=protect):
             raise RuntimeError(
                 f"pool exhausted: need {n_fresh} fresh blocks, "
                 f"{len(self._free)} free + {len(self._lru)} evictable")
         # pin the shared prefix FIRST so fresh allocation cannot evict it
-        for b in shared:
+        for b in dev_shared:
             self._pin(b)
+        # consume host sources BEFORE fresh allocation: taking fresh blocks
+        # can itself demote device blocks into the host tier, and a host
+        # eviction triggered by that must not race the slots this request
+        # is about to promote
+        promo = [self._take_host(s) for s in promote]   # [(slab, reg)]
+        cow_slab = self._peek_host(cow[0][1]) if cow_host else None
         fresh, stale = [], []
         for _ in range(n_fresh):
             b, was_cached = self._take_fresh(protect)
@@ -202,15 +319,38 @@ class PagedKVCache:
             fresh.append(b)
             self._ref[b] = 1
         self._stamp(stale)                 # evicted content is stale
+        # build the table in logical order, promotions drawing fresh blocks
+        it = iter(fresh)
+        table, promo_dst = [], []
+        for e in shared:
+            if isinstance(e, tuple):
+                promo_dst.append(next(it))
+                table.append(promo_dst[-1])
+            else:
+                table.append(e)
+        rest = list(it)
+        for (slab, reg), dst in zip(promo, promo_dst):
+            self.data = self._write_fn(self.data, slab,
+                                       jnp.asarray(dst, jnp.int32))
+            self._reg[dst] = reg           # re-registered on DEVICE
+            index = self._full if reg[0] == "full" else self._tail
+            index[reg[1]] = dst
+            self.promoted += 1
         if cow is not None:
             src, keep = cow
-            if src not in self._ref and src not in self._lru:
-                raise RuntimeError(f"COW source block {src} not resident")
-            self.data = self._cow_fn(self.data, jnp.asarray(src, jnp.int32),
-                                     jnp.asarray(fresh[0], jnp.int32),
-                                     jnp.asarray(keep, jnp.int32))
+            if cow_host:
+                self.data = self._cow_slab_fn(
+                    self.data, cow_slab, jnp.asarray(rest[0], jnp.int32),
+                    jnp.asarray(keep, jnp.int32))
+            else:
+                if src not in self._ref and src not in self._lru:
+                    raise RuntimeError(f"COW source block {src} not resident")
+                self.data = self._cow_fn(
+                    self.data, jnp.asarray(src, jnp.int32),
+                    jnp.asarray(rest[0], jnp.int32),
+                    jnp.asarray(keep, jnp.int32))
             self.cow_copies += 1
-        self._tables[rid] = list(shared) + fresh
+        self._tables[rid] = table + rest
         return self._tables[rid]
 
     def free(self, rid: int) -> None:
@@ -246,13 +386,17 @@ class PagedKVCache:
     # ---- prefix cache ----------------------------------------------------
     def match_prefix(self, tokens: np.ndarray,
                      chain: Optional[List[int]] = None
-                     ) -> Tuple[List[int], Optional[Tuple[int, int]]]:
+                     ) -> Tuple[List, Optional[Tuple]]:
         """Longest cached prefix of ``tokens``: (matched full blocks, tail).
-        ``tail = (block, n_common)`` if a registered partial tail extends
-        the matched full-block prefix by ``n_common`` shared tokens.
-        ``chain`` is the precomputed ``_chain_hashes`` of ``tokens`` — the
-        scheduler caches it so a pool-blocked request re-matched every
-        engine step doesn't re-hash its whole prompt each time."""
+        Each full-block entry is a device block id (int) or — with the host
+        tier on — ``("host", slot)`` for a demoted block (device wins when
+        a hash could be in either tier; demotion keeps them disjoint).
+        ``tail = (src, n_common)`` if a registered partial tail (device id
+        or host entry, same encoding) extends the matched full-block prefix
+        by ``n_common`` shared tokens.  ``chain`` is the precomputed
+        ``_chain_hashes`` of ``tokens`` — the scheduler caches it so a
+        pool-blocked request re-matched every engine step doesn't re-hash
+        its whole prompt each time."""
         toks = np.asarray(tokens).reshape(-1)
         bs = self.block_size
         if chain is None:
@@ -260,14 +404,25 @@ class PagedKVCache:
         h, fulls = _HASH_SEED, []
         for h2 in chain:
             b = self._full.get(h2)
+            if b is None and self.host is not None:
+                s = self._h_full.get(h2)
+                if s is not None:
+                    b = ("host", s)
+                    self.host.touch(s)
             if b is None:
                 break
             fulls.append(b)
             h = h2
         tail = None
         tb = self._tail.get(h)
+        t_toks = self._reg[tb][2] if tb is not None else None
+        if tb is None and self.host is not None:
+            s = self._h_tail.get(h)
+            if s is not None:
+                tb = ("host", s)
+                t_toks = self._h_reg[s][2]
+                self.host.touch(s)
         if tb is not None:
-            t_toks = self._reg[tb][2]
             rem = toks[len(fulls) * bs:]
             m = 0
             while m < min(len(rem), len(t_toks)) and \
@@ -302,6 +457,15 @@ class PagedKVCache:
                 self._reg[tb] = ("tail", h,
                                  tuple(map(int, toks[len(toks) - rem:])))
                 self._tail[h] = tb
+        if self.host is not None:
+            # single-residency: a degraded (cold) admit can re-prefill and
+            # register content whose demoted copy still sits on the host
+            # tier — drop the host copy so a hash matches in exactly one
+            # tier (the device copy is the one future sharers should pin)
+            for idx, hmap in ((self._full, self._h_full),
+                              (self._tail, self._h_tail)):
+                for hh in [hh for hh in hmap if hh in idx]:
+                    self._h_unregister(hmap[hh])
 
     # ---- internals -------------------------------------------------------
     def _pin(self, b: int) -> None:
@@ -315,15 +479,20 @@ class PagedKVCache:
             self._ref[b] += 1
 
     def _take_fresh(self, protect: Sequence[int]) -> Tuple[int, bool]:
-        """One fresh block: free list first, then LRU eviction (oldest
-        registered block loses its cache entry).  Returns (block, needs
-        stamping) — free-list blocks were stamped when freed."""
+        """One fresh block: free list first, then LRU eviction.  With the
+        host tier on the evicted block DEMOTES (content + registration move
+        to a host slab, still matchable); otherwise it just loses its cache
+        entry.  Returns (block, needs stamping) — free-list blocks were
+        stamped when freed."""
         if self._free:
             return self._free.pop(), False
         for b in self._lru:                        # oldest first
             if b not in protect:
                 del self._lru[b]
-                self._unregister(b)
+                if self.host is not None:
+                    self._demote(b)
+                else:
+                    self._unregister(b)
                 self.evictions += 1
                 return b, True
         raise RuntimeError("pool exhausted: no evictable block")
@@ -333,6 +502,79 @@ class PagedKVCache:
         index = self._full if reg[0] == "full" else self._tail
         if index.get(reg[1]) == b:
             del index[reg[1]]
+
+    # ---- host tier internals --------------------------------------------
+    def _demote(self, b: int) -> None:
+        """Move an evicted registered block into the host tier: slice its
+        slab out of the pool (a jitted read dispatched BEFORE the caller
+        stamps/recycles the block — dataflow keeps it ordered), place it on
+        pinned host memory, and move the hash registration across tiers.
+        The host tier's own eviction (oldest slot) is real cache loss."""
+        reg = self._reg.pop(b)
+        index = self._full if reg[0] == "full" else self._tail
+        if index.get(reg[1]) != b:
+            return                          # duplicate content; nothing owned
+        del index[reg[1]]
+        hmap = self._h_full if reg[0] == "full" else self._h_tail
+        old = hmap.get(reg[1])
+        if old is not None:                 # stale host copy of the same hash
+            self._h_unregister(old)
+        if self.host.num_free == 0:
+            self._h_unregister(self.host.oldest())
+            self.host_evictions += 1
+        slab = self._extract_fn(self.data, jnp.asarray(b, jnp.int32))
+        slot = self.host.put(slab)
+        self._h_reg[slot] = reg
+        hmap[reg[1]] = slot
+        self.demoted += 1
+
+    def _h_unregister(self, slot: int) -> None:
+        reg = self._h_reg.pop(slot)
+        index = self._h_full if reg[0] == "full" else self._h_tail
+        if index.get(reg[1]) == slot:
+            del index[reg[1]]
+        self.host.drop(slot)
+        self._staged.pop(slot, None)
+
+    def _take_host(self, slot: int) -> Tuple[object, Tuple]:
+        """Consume host slot ``slot`` for promotion: returns (device slab,
+        registration).  A staged buffer (``stage``) is used when present —
+        its H2D copy was dispatched while an earlier step computed; the
+        fallback ``jax.device_put`` still dispatches asynchronously, and
+        the jitted write that scatters the slab into ``self.data`` orders
+        after it by dataflow."""
+        reg = self._h_reg.pop(slot)
+        index = self._h_full if reg[0] == "full" else self._h_tail
+        if index.get(reg[1]) == slot:
+            del index[reg[1]]
+        slab = self._staged.pop(slot, None)
+        if slab is not None:
+            self.staged_used += 1
+        else:
+            slab = jax.device_put(self.host.get(slot))
+        self.host.drop(slot)
+        return slab, reg
+
+    def _peek_host(self, slot: int) -> object:
+        """Device slab of host slot ``slot`` WITHOUT consuming it (COW tail
+        sources: the sharer's clone is private, so the host copy stays
+        matchable for the next sharer)."""
+        self.host.touch(slot)
+        slab = self._staged.get(slot)
+        if slab is not None:
+            self.staged_used += 1
+            return slab
+        return jax.device_put(self.host.get(slot))
+
+    def stage(self, slot: int) -> bool:
+        """Dispatch the H2D copy for host slot ``slot`` ahead of its
+        promotion (the engine's prefetch hook calls this while the step it
+        just dispatched is still computing — double buffering).  Idempotent;
+        returns True when a new copy was started."""
+        if self.host is None or slot in self._staged:
+            return False
+        self._staged[slot] = jax.device_put(self.host.get(slot))
+        return True
 
     def _stamp(self, blocks: List[int]) -> None:
         """pos=-1-stamp ``blocks`` on device: recycled blocks must read as
@@ -374,6 +616,24 @@ class PagedKVCache:
             assert r is not None and r[0] == "tail" and r[1] == h
         for b in self._reg:
             assert b in held or b in lru, "registered block recycled"
+        if self.host is not None:
+            slots = set(self._h_reg)
+            assert slots == set(self.host._slabs) == set(self.host._lru), \
+                "host registrations out of sync with stored slabs"
+            assert len(slots) + self.host.num_free == self.host.capacity, \
+                "host slot leaked or invented"
+            assert not (slots & set(self.host._free)), \
+                "host slot both stored and free"
+            for h, s in self._h_full.items():
+                assert self._h_reg.get(s, (None, None))[:2] == ("full", h)
+            for h, s in self._h_tail.items():
+                r = self._h_reg.get(s)
+                assert r is not None and r[0] == "tail" and r[1] == h
+            assert not (set(self._h_full) & set(self._full)), \
+                "full-block hash resident in both tiers"
+            assert not (set(self._h_tail) & set(self._tail)), \
+                "tail hash resident in both tiers"
+            assert set(self._staged) <= slots, "staged buffer for freed slot"
 
 
 # ---------------------------------------------------------------------------
@@ -409,6 +669,55 @@ def _cow_block(data, src, dst, keep):
         return leaf.at[:, dst].set(row)
 
     return jax.tree.map(c, data)
+
+
+def _extract_block(data, b):
+    """Slice block ``b`` out of the pool as a standalone slab pytree
+    (each KV leaf (R, block_size, ...)) — the D2H half of demotion."""
+    def e(leaf):
+        if leaf.ndim < 3:
+            return leaf
+        return jnp.take(leaf, b, axis=1)
+
+    return jax.tree.map(e, data)
+
+
+def _write_block(data, slab, dst):
+    """Write an extracted slab into block ``dst`` — the H2D half of
+    promotion.  The slab's buffers arrive via ``jax.device_put`` (possibly
+    pre-staged); dataflow orders this write after that copy completes."""
+    def w(leaf, s):
+        if leaf.ndim < 3:
+            return leaf
+        return leaf.at[:, dst].set(s.astype(leaf.dtype))
+
+    return jax.tree.map(w, data, slab)
+
+
+def _cow_from_slab(data, slab, dst, keep):
+    """``_cow_block`` with a host-tier source: copy an extracted slab into
+    ``dst``, invalidating slots >= ``keep`` (shared partial tail)."""
+    def c(leaf, s):
+        if leaf.ndim < 3:
+            return leaf
+        row = s.astype(leaf.dtype)
+        if jnp.issubdtype(leaf.dtype, jnp.integer):
+            slot = jnp.arange(leaf.shape[2], dtype=jnp.int32)
+            valid = (slot < keep).reshape((1, -1) + (1,) * (row.ndim - 2))
+            row = jnp.where(valid, row, -1)
+        return leaf.at[:, dst].set(row)
+
+    return jax.tree.map(c, data, slab)
+
+
+# shared jit singletons (see PagedKVCache.__init__): compiled executables
+# are cached per wrapper, so one wrapper per process amortises compilation
+# across every pool instance of the same geometry
+_stamp_fn = jax.jit(_stamp_blocks, donate_argnums=0)
+_cow_fn = jax.jit(_cow_block, donate_argnums=0)
+_extract_fn = jax.jit(_extract_block)
+_write_fn = jax.jit(_write_block, donate_argnums=0)
+_cow_slab_fn = jax.jit(_cow_from_slab, donate_argnums=0)
 
 
 # ---------------------------------------------------------------------------

@@ -97,12 +97,15 @@ class Scheduler:
         return len(self.prefilling) + len(self.decoding)
 
     # ------------------------------------------------------------------
-    def _match(self, r: rq.Request) -> Tuple[int, List[int],
-                                             Optional[Tuple[int, int]]]:
+    def _match(self, r: rq.Request) -> Tuple[int, List,
+                                             Optional[Tuple]]:
         """Longest usable cached prefix of ``r``: (cached_len, shared full
         blocks, cow) with cached_len floored to ``prefix_align`` and capped
         at prompt_len - 1 (at least one token must be recomputed to produce
-        the first-token logits)."""
+        the first-token logits).  With the host tier on, shared entries and
+        the COW source may be ``("host", slot)`` — demoted blocks the pool
+        promotes at alloc time (pool.alloc_prefix); they pass through here
+        opaquely."""
         chain = self._chain.get(r.rid)
         if chain is None:
             chain = self._chain[r.rid] = _chain_hashes(
@@ -130,8 +133,15 @@ class Scheduler:
             cached, shared, cow = (self._match(r) if self.prefix_cache
                                    else (0, [], None))
             n = self.blocks_needed(r, cached_len=cached)
-            protect = shared + ([cow[0]] if cow else [])
-            if cached and not pool.can_alloc(n - len(shared),
+            # host-tier matches (("host", slot) entries) are cached WORK —
+            # the prefill they save is saved either way — but not cached
+            # BLOCKS: each promotion consumes a fresh device block, so only
+            # device-resident shared blocks reduce the fresh-block demand
+            # (and only device ids can be eviction-protected)
+            dev_shared = [b for b in shared if not isinstance(b, tuple)]
+            protect = dev_shared + \
+                ([cow[0]] if cow and not isinstance(cow[0], tuple) else [])
+            if cached and not pool.can_alloc(n - len(dev_shared),
                                              exclude=protect):
                 # a hit can demand MORE of the pool than a cold admit: a
                 # token-granularity hit shifts the chunk grid (up to one
@@ -140,10 +150,14 @@ class Scheduler:
                 # rather than stalling the FCFS head on a pool the request
                 # fits cold.
                 cached, shared, cow, protect = 0, [], None, []
+                dev_shared = []
                 n = self.blocks_needed(r)
                 self.reg.count("sched/hit_degraded")
-            if not pool.can_alloc(n - len(shared), exclude=protect):
+            if not pool.can_alloc(n - len(dev_shared), exclude=protect):
                 break                      # FCFS: no skipping the head
+            n_promote = len(shared) - len(dev_shared)
+            if n_promote:
+                self.reg.count("sched/promoted_blocks", float(n_promote))
             pool.alloc_prefix(r.rid, n, shared, cow)
             pool.lookups += 1
             pool.prompt_tokens += r.prompt_len

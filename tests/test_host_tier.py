@@ -1,0 +1,281 @@
+"""Hierarchical KV pool (host-memory tier behind the device pool).
+
+Eviction pressure on a pool with ``host_tier_blocks`` > 0 DEMOTES
+registered prefix blocks to host buffers instead of destroying them; the
+scheduler matches both tiers, and admission PROMOTES host matches back
+into fresh device blocks (serving/pool.py).  The gate in every test here
+is the same one the device-side prefix cache answers to: tiering must be
+invisible to outputs.  A device pool sized so that every finished
+request's blocks are evicted before the trace repeats must still serve
+token-identically to an unconstrained pool — the host tier only changes
+WHERE the cached KV waits, never what attention reads.
+
+Also covered: host-tier slot/LRU/refcount invariants under randomized
+pressure, the data round-trip of a demote -> match -> promote cycle at
+the pool level, the selection-score-driven H2D prefetch overlapping
+engine steps (obs spans), and the regression gate's ungated-record
+warning (benchmarks/check_regression.py).
+
+The suite carries the ``offload`` marker: CI runs it as the fast tier's
+dedicated offload-smoke step (``pytest -m offload``).
+"""
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.serving import request as rq
+from repro.serving.engine import Engine
+from repro.serving.pool import PagedKVCache, blocks_for_request
+from repro.serving.request import make_requests
+from repro.serving.scheduler import Scheduler
+
+pytestmark = pytest.mark.offload
+
+KEY = jax.random.PRNGKey(0)
+BS = 16
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_config("granite-3-2b").smoke()
+    model = build_model(cfg)
+    return cfg, model, model.init(KEY)
+
+
+# ---------------------------------------------------------------------------
+# pool level: demote -> match -> promote round trip
+# ---------------------------------------------------------------------------
+
+def _fill(data, blocks, seed=5):
+    """Plant recognizable per-block content (distinct value per block) in
+    every KV leaf so a tier round trip can be checked for data equality."""
+    def f(leaf):
+        if leaf.ndim < 3:
+            return leaf
+        for j, b in enumerate(blocks):
+            val = seed + j
+            if not jnp.issubdtype(leaf.dtype, jnp.integer):
+                val = (seed + j) * 0.25
+            leaf = leaf.at[:, b].set(val)
+        return leaf
+    return jax.tree.map(f, data)
+
+
+def _snap(data, blocks):
+    return [np.asarray(leaf[:, np.asarray(blocks)])
+            for leaf in jax.tree.leaves(data)
+            if hasattr(leaf, "ndim") and leaf.ndim >= 3]
+
+
+def test_demote_match_promote_roundtrip(smoke_model):
+    """Pressure-evicting a registered prefix moves its KV to the host tier
+    (matchable as ("host", slot) entries); alloc_prefix promotes it into
+    fresh device blocks carrying bit-identical content."""
+    _, model, _ = smoke_model
+    pool = PagedKVCache(model, num_blocks=3, block_size=BS,
+                        host_tier_blocks=4)
+    toks = np.arange(2 * BS, dtype=np.int32) + 3
+    pool.alloc(0, 2)
+    donor = pool.table(0)
+    pool.data = _fill(pool.data, donor)
+    pool.register_prefix(0, toks)
+    want = _snap(pool.data, donor)
+    pool.free(0)                                # both blocks on the LRU
+    pool.alloc(1, 3)                            # pressure: evicts -> demotes
+    assert pool.demoted == 2
+    fulls, tail = pool.match_prefix(toks)
+    assert [b for b in fulls if not isinstance(b, tuple)] == []
+    assert len(fulls) == 2 and tail is None
+    pool.check_invariants()
+    pool.free(1)
+    table = pool.alloc_prefix(2, 3, shared=fulls)
+    assert pool.promoted == 2
+    got = _snap(pool.data, table[:2])
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+    # single residency: the hash now lives on the device tier again
+    fulls2, _ = pool.match_prefix(toks)
+    assert fulls2 == table[:2]
+    pool.check_invariants()
+
+
+def test_host_tier_randomized_invariants(smoke_model):
+    """Randomized admit/free cycles over a tiny device pool + tinier host
+    tier: slot maps, LRU order, hash indexes and cross-tier single
+    residency stay consistent while demotion, promotion and host-side
+    eviction (cache LOSS at the bottom of the hierarchy) all trigger."""
+    _, model, _ = smoke_model
+    pool = PagedKVCache(model, num_blocks=8, block_size=BS,
+                        host_tier_blocks=3)
+    sched = Scheduler(pool, chunk_size=BS, max_prefill_tokens=BS,
+                      max_decode_batch=8, prefix_cache=True, prefix_align=1)
+    rng = np.random.default_rng(1)
+    fams = [rng.integers(3, 100, (3 * BS,)).astype(np.int32)
+            for _ in range(3)]
+    held = {}
+    rid = 0
+    for _ in range(200):
+        if held and (rng.random() < 0.5 or not pool.can_alloc(4)):
+            victim = int(rng.choice(list(held)))
+            pool.free(victim)
+            del held[victim]
+        else:
+            fam = fams[int(rng.integers(len(fams)))]
+            plen = int(rng.integers(BS, len(fam)))
+            toks = fam[:plen].copy()
+            r = rq.Request(rid=rid, tokens=toks, max_new=1)
+            cached, shared, cow = sched._match(r)
+            dev_shared = [b for b in shared if not isinstance(b, tuple)]
+            protect = dev_shared + \
+                ([cow[0]] if cow and not isinstance(cow[0], tuple) else [])
+            n = blocks_for_request(plen, 1, BS, BS, cached_len=cached)
+            if pool.can_alloc(n - len(dev_shared), exclude=protect):
+                pool.alloc_prefix(rid, n, shared, cow)
+                pool.register_prefix(rid, toks)
+                held[rid] = True
+                rid += 1
+        pool.check_invariants()
+    assert pool.demoted > 0                     # pressure reached the tier
+    assert pool.promoted > 0                    # host matches re-admitted
+    assert pool.host_evictions > 0              # and the tier itself filled
+    for r_ in list(held):
+        pool.free(r_)
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: tiering is invisible to outputs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["full", "quoka"])
+def test_undersized_pool_with_host_tier_parity(smoke_model, method):
+    """The acceptance gate: a device pool sized below the trace's working
+    set (every finished request's prefix blocks are evicted before the
+    re-send) + host tier serves token-identically to an unconstrained
+    big-pool serve and to cold per-request generate(), on BOTH the cold
+    pass and the prefix-hit re-send — with the tier actually exercised
+    (demotions on pass 1, promotions on pass 2)."""
+    cfg, model, p = smoke_model
+    eng = Engine(model, p, method=method)
+    rng = np.random.default_rng(21)
+    prompts = [rng.integers(3, cfg.vocab, (2 * BS,)).astype(np.int32)
+               for _ in range(4)]
+    max_new = 4
+    refs = [eng.generate(eng.pad_prompt(pr[None]), max_new).tokens[0]
+            for pr in prompts]
+    big = eng.make_serve_state(make_requests(prompts, max_new),
+                               block_size=BS, max_decode_batch=1)
+    big_res = eng.serve(make_requests(prompts, max_new), state=big)
+    need = blocks_for_request(2 * BS, max_new, BS, BS)
+    state = eng.make_serve_state(make_requests(prompts, max_new),
+                                 block_size=BS, num_blocks=need + 1,
+                                 max_decode_batch=1,
+                                 host_tier_blocks=4 * need)
+    cold = eng.serve(make_requests(prompts, max_new), state=state)
+    assert eng.stats["demoted"] > 0
+    for i, ref in enumerate(refs):
+        np.testing.assert_array_equal(cold.tokens[i], ref)
+        np.testing.assert_array_equal(big_res.tokens[i], ref)
+    hot = eng.serve(make_requests(prompts, max_new), state=state)
+    assert eng.stats["promoted"] > 0
+    assert eng.stats["cache_hits"] > 0
+    assert any(v > 0 for v in hot.cached_len.values())
+    if method != "full":                        # hits stay on the B_CP grid
+        assert all(v % cfg.quoka.chunk_size == 0
+                   for v in hot.cached_len.values())
+    for i, ref in enumerate(refs):
+        np.testing.assert_array_equal(hot.tokens[i], ref)
+    state.pool.check_invariants()
+
+
+def test_prefetch_overlaps_engine_steps(smoke_model):
+    """The selection-score-driven prefetch stages H2D copies for the next
+    waiting request's host matches WHILE the current request's step runs:
+    every pool/h2d_stage span must nest inside an engine step span, and at
+    least one promotion must consume a staged buffer instead of issuing a
+    blocking copy at admission."""
+    from repro.obs import Registry
+    cfg, model, p = smoke_model
+    reg = Registry()
+    eng = Engine(model, p, method="quoka", registry=reg)
+    rng = np.random.default_rng(23)
+    x = rng.integers(3, cfg.vocab, (2 * BS,)).astype(np.int32)
+    y = rng.integers(3, cfg.vocab, (2 * BS,)).astype(np.int32)
+    need = blocks_for_request(2 * BS, 4, BS, BS)
+    state = eng.make_serve_state(make_requests([x], 4), block_size=BS,
+                                 num_blocks=need + 1, max_decode_batch=1,
+                                 host_tier_blocks=4 * need,
+                                 prefetch_depth=4)
+    eng.serve(make_requests([x], 4), state=state)   # register x
+    eng.serve(make_requests([y], 4), state=state)   # pressure demotes x
+    # x queues behind y (max_decode_batch=1): its host blocks are staged
+    # during y's steps and consumed when x is admitted
+    res = eng.serve(make_requests([y, x], 4), state=state)
+    assert eng.stats["staged_used"] >= 1
+    snap = reg.snapshot()
+    assert snap["counters"].get("pool/staged", 0) >= 1
+    stage = [e for e in reg.trace_events if e["name"] == "pool/h2d_stage"]
+    steps = [e for e in reg.trace_events
+             if e["name"] in ("engine/prefill_step", "engine/decode_step")]
+    assert stage, "prefetch never staged a host block"
+    for e in stage:
+        assert any(s["ts"] <= e["ts"] and
+                   e["ts"] + e["dur"] <= s["ts"] + s["dur"] for s in steps), \
+            "h2d_stage span not nested inside an engine step span"
+    assert len(res.tokens[1]) == 4          # x finished through the cycle
+    state.pool.check_invariants()
+
+
+def test_host_tier_rejects_mesh(smoke_model):
+    """The host tier is single-device (per-buffer device_put round trips
+    don't compose with sharded pool leaves yet) — constructing a sharded
+    pool with host_tier_blocks must fail loudly."""
+    _, model, _ = smoke_model
+
+    class FakeMesh:               # pool only checks `mesh is not None`-ness
+        pass
+
+    with pytest.raises(ValueError, match="host"):
+        PagedKVCache(model, num_blocks=4, block_size=BS,
+                     mesh=FakeMesh(), host_tier_blocks=4)
+
+
+# ---------------------------------------------------------------------------
+# regression-gate plumbing (benchmarks/check_regression.py)
+# ---------------------------------------------------------------------------
+
+def test_check_regression_warns_on_ungated_records(tmp_path, monkeypatch,
+                                                   capsys):
+    """Records no baseline metric selects used to pass silently; the gate
+    now surfaces them as ::warning annotations and writes the per-metric
+    table to $GITHUB_STEP_SUMMARY."""
+    check_regression = pytest.importorskip("benchmarks.check_regression")
+    out, base = tmp_path / "out", tmp_path / "baselines"
+    out.mkdir(), base.mkdir()
+    (out / "mybench.json").write_text(json.dumps([
+        {"name": "my/gated", "us_per_call": 1.0, "scenario": "a",
+         "speed": 2.0},
+        {"name": "my/loose", "us_per_call": 1.0, "scenario": "b"},
+    ]))
+    (base / "mybench.json").write_text(json.dumps({"metrics": [
+        {"name": "gated_speed", "match": {"scenario": "a"}, "field": "speed",
+         "baseline": 2.0, "rel_tol": 0.5},
+    ]}))
+    summary = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+    monkeypatch.setattr(sys, "argv", ["check_regression",
+                                      "--out", str(out),
+                                      "--baselines", str(base)])
+    assert check_regression.main() == 0
+    got = capsys.readouterr().out
+    warn = [l for l in got.splitlines() if l.startswith("::warning")]
+    assert len(warn) == 1 and "my/loose" in warn[0]
+    assert "my/gated" not in warn[0]
+    table = summary.read_text()
+    assert "mybench/gated_speed" in table and "ok" in table
