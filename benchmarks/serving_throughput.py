@@ -18,6 +18,12 @@ and compares the re-send's TTFT with the hierarchical pool's host tier on
 (eviction demotes to host memory; the re-send promotes) vs off (the
 re-send prefills cold).  Its TTFT speedup is also regression-gated.
 
+A fourth scenario, ``multi_tenant_slo``, serves a background tenant's
+long decodes alongside an interactive tenant's short deadline-carrying
+prompts under FCFS vs SLOPolicy (EDF admission + preemption via block
+suspend/resume): the interactive p99 TTFT ratio (fcfs / slo) is the
+regression-gated headline for the policy control plane.
+
     PYTHONPATH=src python -m benchmarks.serving_throughput [--smoke]
 
 Emits JSON to benchmarks/out/serving_throughput.json like attn_latency/ttft.
@@ -188,6 +194,76 @@ def _host_offload(cfg, params, *, smoke: bool, seed: int, method: str,
     return speedup
 
 
+def _multi_tenant_slo(cfg, params, *, smoke: bool, seed: int, method: str,
+                      mesh_label: str):
+    """SLO-policy scenario: a background tenant floods both decode slots
+    with long-prefill, long-decode requests at t=0; an interactive tenant's
+    short deadline-carrying prompts arrive while those decodes run.  Under
+    FCFS the interactive requests wait for a background decode to finish;
+    under SLOPolicy EDF admission preempts a background decode (block
+    suspend/resume) and the interactive TTFT collapses.  The gated
+    headline is the interactive-tenant p99 TTFT ratio (fcfs / slo)."""
+    chunk = cfg.quoka.chunk_size
+    n_bg, n_int = 2, (4 if smoke else 8)
+    plen_bg = 4 * chunk if smoke else 8 * chunk
+    mn_bg = 32 if smoke else 96            # long decode = wide preempt window
+    mn_int = 2
+    deadline = 0.02
+    rng = np.random.default_rng(seed + 3)
+    prompts = [rng.integers(3, cfg.vocab, (plen_bg,)).astype(np.int32)
+               for _ in range(n_bg)] + \
+              [rng.integers(3, cfg.vocab, (chunk,)).astype(np.int32)
+               for _ in range(n_int)]
+    arrivals = np.concatenate(
+        [np.zeros(n_bg), 0.01 + 0.01 * np.arange(n_int)])
+
+    def reqs():
+        return make_requests(
+            prompts, [mn_bg] * n_bg + [mn_int] * n_int, arrivals=arrivals,
+            tenants=["background"] * n_bg + ["interactive"] * n_int,
+            priorities=[0] * n_bg + [1] * n_int,
+            ttft_deadlines=[None] * n_bg + [deadline] * n_int)
+
+    kw = dict(block_size=chunk, max_decode_batch=2,
+              max_prefill_tokens=2 * chunk)
+    eng = Engine(build_model(cfg), params, method=method)
+    int_rids = range(n_bg, n_bg + n_int)
+    p99, res_by = {}, {}
+    for pol in ("fcfs", "slo"):
+        # per-policy states: a preempting policy compiles a wider
+        # block-table geometry (resume worst case), so each arm warms and
+        # measures its own geometry; the measured pass runs a fresh pool
+        wst = eng.make_serve_state(reqs(), policy=pol, **kw)
+        eng.serve(reqs(), state=wst)
+        st = eng.make_serve_state(reqs(), policy=pol, **kw)
+        res = eng.serve(reqs(), state=st)
+        res_by[pol] = res
+        p99[pol] = float(np.percentile(
+            [res.ttft_s[rid] for rid in int_rids], 99))
+    assert res_by["slo"].preemptions >= 1, \
+        "multi_tenant_slo scenario failed to trigger a preemption"
+    ratio = p99["fcfs"] / max(p99["slo"], 1e-9)
+    for pol in ("fcfs", "slo"):
+        res = res_by[pol]
+        emit(f"serving/multi_tenant_slo/{pol}", p99[pol] * 1e6,
+             f"int_p99={p99[pol]*1e3:.1f}ms", bench="serving_throughput",
+             scenario="multi_tenant_slo", mode=pol, method=method,
+             mesh=mesh_label, granularity=cfg.quoka.granularity,
+             reuse_interval=cfg.quoka.reuse_interval, fused=False,
+             interactive_ttft_p99_s=p99[pol],
+             tokens_per_s=res.tokens_per_s,
+             preemptions=res.preemptions, resumes=res.resumes,
+             deadline_misses=res.deadline_misses,
+             **(dict(interactive_ttft_p99_ratio=ratio)
+                if pol == "slo" else {}),
+             n_bg=n_bg, n_interactive=n_int, prompt_len=plen_bg)
+    print(f"# multi_tenant_slo: interactive TTFT p99 fcfs "
+          f"{p99['fcfs']*1e3:.1f} ms -> slo {p99['slo']*1e3:.1f} ms "
+          f"= {ratio:.2f}x ({res_by['slo'].preemptions} preemptions, "
+          f"{res_by['slo'].resumes} resumes)", flush=True)
+    return ratio
+
+
 def _granularity_scenario(cfg, params, prompts, arrivals, serve_kw, max_new,
                           *, mesh, mesh_label):
     """Serving TTFT, token-granular vs block-granular + cross-layer-reuse
@@ -343,6 +419,8 @@ def run(*, smoke: bool = False, method: str = "quoka", seed: int = 0,
     if mesh is None:          # host tier is single-device (pool.py raises)
         host_speedup = _host_offload(cfg, params, smoke=smoke, seed=seed,
                                      method=method, mesh_label=mesh_label)
+    slo_ratio = _multi_tenant_slo(cfg, params, smoke=smoke, seed=seed,
+                                  method=method, mesh_label=mesh_label)
     gran_ratio = None
     if method == "quoka":
         gran_ratio = _granularity_scenario(
@@ -360,6 +438,7 @@ def run(*, smoke: bool = False, method: str = "quoka", seed: int = 0,
     return {"continuous_vs_sequential": speedup,
             "prefix_ttft_speedup": prefix_speedup,
             "host_offload_ttft_speedup": host_speedup,
+            "multi_tenant_slo_ttft_ratio": slo_ratio,
             "block_vs_token_ttft_p50": gran_ratio}
 
 

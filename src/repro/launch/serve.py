@@ -48,7 +48,9 @@ from repro.training import checkpoint as ckpt
 
 
 def _build_trace(model, args, rng):
-    """(prompts, arrivals) for one of three trace shapes:
+    """(prompts, arrivals, extras) for one of four trace shapes — extras is
+    a dict of per-request ``make_requests`` kwargs (tenants / priorities /
+    deadlines), empty for the single-tenant traces:
 
       poisson    independent random prompts, Poisson arrivals (--rate)
       shared     every prompt opens with one shared system prompt of
@@ -58,8 +60,30 @@ def _build_trace(model, args, rng):
                  --turn-gap seconds apart (synthetic: extensions are random
                  tokens, not the model's own replies — latency is
                  weight-independent either way)
+      multi_tenant  a background tenant floods long prompts at t=0 while an
+                 interactive tenant's short prompts arrive at --rate
+                 carrying --ttft-deadline; pair with --policy slo to see
+                 EDF + preemption protect the interactive TTFT
     """
     vocab = model.cfg.vocab
+    if args.trace == "multi_tenant":
+        n_bg = max(1, args.n_requests // 4)
+        n_int = max(1, args.n_requests - n_bg)
+        bg = [rng.integers(3, vocab, (args.prompt_len,)).astype(np.int32)
+              for _ in range(n_bg)]
+        ilen = max(1, args.prompt_len // 8)
+        inter = [rng.integers(3, vocab,
+                              (int(rng.integers(max(1, ilen // 2),
+                                                ilen + 1)),)).astype(np.int32)
+                 for _ in range(n_int)]
+        rate = args.rate if not np.isinf(args.rate) else 1000.0
+        arrivals = np.concatenate(
+            [np.zeros(n_bg), np.cumsum(rng.exponential(1.0 / rate, n_int))])
+        extras = dict(
+            tenants=["background"] * n_bg + ["interactive"] * n_int,
+            priorities=[0] * n_bg + [1] * n_int,
+            ttft_deadlines=[None] * n_bg + [args.ttft_deadline] * n_int)
+        return bg + inter, arrivals, extras
     if args.trace in ("poisson", "shared"):
         arrivals = (np.zeros(args.n_requests) if np.isinf(args.rate)
                     else np.cumsum(rng.exponential(1.0 / args.rate,
@@ -78,7 +102,7 @@ def _build_trace(model, args, rng):
                                        (int(rng.integers(1, sfx + 1)),)
                                        ).astype(np.int32)])
                 for _ in range(args.n_requests)]
-        return prompts, arrivals
+        return prompts, arrivals, {}
     assert args.trace == "multiturn"
     n_conv = max(1, args.n_requests // args.turns)
     ext = max(1, args.prompt_len // (2 * args.turns))
@@ -94,7 +118,7 @@ def _build_trace(model, args, rng):
                     [cur, rng.integers(3, vocab, (ext,)).astype(np.int32)])
             prompts.append(cur.copy())
             arrivals.append(start + t * args.turn_gap)
-    return prompts, np.asarray(arrivals)
+    return prompts, np.asarray(arrivals), {}
 
 
 def _print_telemetry(reg):
@@ -130,7 +154,7 @@ def run_continuous(model, params, args, mesh=None):
     """Trace-driven continuous batching with prefix caching (see
     --trace / --no-prefix-cache)."""
     rng = np.random.default_rng(0)
-    prompts, arrivals = _build_trace(model, args, rng)
+    prompts, arrivals, extras = _build_trace(model, args, rng)
     reg = None
     if args.metrics or args.trace_dir:
         from repro.obs import Registry
@@ -143,7 +167,8 @@ def run_continuous(model, params, args, mesh=None):
               max_decode_batch=args.max_decode_batch,
               prefix_cache=not args.no_prefix_cache,
               host_tier_blocks=args.host_tier_blocks,
-              prefetch_depth=args.prefetch_depth)
+              prefetch_depth=args.prefetch_depth,
+              policy=args.policy)
     # compile warmup with the REAL step geometry: the jit cache is keyed on
     # max_nb/num_blocks, which derive from the longest prompt and max_new
     longest = max(prompts, key=len)
@@ -154,8 +179,8 @@ def run_continuous(model, params, args, mesh=None):
         # drops the warmup trace's samples without recompiling
         from repro.obs import Registry
         reg = eng.registry = Registry()
-    res = eng.serve(make_requests(prompts, args.max_new, arrivals=arrivals),
-                    **kw)
+    res = eng.serve(make_requests(prompts, args.max_new, arrivals=arrivals,
+                                  **extras), **kw)
     ttft = np.asarray(sorted(res.ttft_s.values()))
     print(f"{args.method:10s} {res.generated} tokens / {res.wall_s:.2f} s "
           f"= {res.tokens_per_s:8.1f} tok/s   "
@@ -164,6 +189,19 @@ def run_continuous(model, params, args, mesh=None):
           f"occupancy {res.occupancy:.2f}   "
           f"steps {res.steps} ({res.prefill_steps} prefill / "
           f"{res.decode_steps} decode)")
+    print(f"{'policy':10s} {res.policy}: {res.preemptions} preemptions, "
+          f"{res.resumes} resumes, {res.deadline_misses} deadline misses")
+    if extras:
+        by_tenant = {}
+        for r in make_requests(prompts, args.max_new, arrivals=arrivals,
+                               **extras):
+            if r.rid in res.ttft_s:
+                by_tenant.setdefault(r.tenant, []).append(res.ttft_s[r.rid])
+        for t, vals in sorted(by_tenant.items()):
+            v = np.asarray(vals)
+            print(f"{'tenant':10s} {t}: TTFT p50 "
+                  f"{np.percentile(v, 50)*1e3:7.1f} ms   p99 "
+                  f"{np.percentile(v, 99)*1e3:7.1f} ms   n {len(v)}")
     s = res.prefix
     if s:
         print(f"{'cache':10s} {s['cache_hits']:.0f}/{s['requests']:.0f} "
@@ -205,10 +243,21 @@ def main():
     ap.add_argument("--rate", type=float, default=float("inf"),
                     help="Poisson arrival rate, requests/s (inf = all at 0)")
     ap.add_argument("--trace", default="poisson",
-                    choices=("poisson", "shared", "multiturn"),
+                    choices=("poisson", "shared", "multiturn",
+                             "multi_tenant"),
                     help="trace shape: independent prompts, a shared "
-                         "system prompt, or multi-turn conversations "
-                         "(the latter two exercise the prefix cache)")
+                         "system prompt, multi-turn conversations (those "
+                         "two exercise the prefix cache), or a background "
+                         "tenant's long prompts vs an interactive tenant's "
+                         "deadline-carrying short prompts (--policy slo)")
+    ap.add_argument("--policy", default="fcfs", choices=("fcfs", "slo"),
+                    help="scheduling policy: FCFS head-of-line (default) "
+                         "or SLO-aware (EDF admission over TTFT deadlines, "
+                         "per-tenant weighted fairness, preemption of "
+                         "running decodes via block suspend/resume)")
+    ap.add_argument("--ttft-deadline", type=float, default=0.5,
+                    help="TTFT deadline (s) tagged onto the interactive "
+                         "tenant's requests (--trace multi_tenant)")
     ap.add_argument("--shared-len", type=int, default=512,
                     help="shared system-prompt tokens (--trace shared)")
     ap.add_argument("--turns", type=int, default=4,

@@ -62,6 +62,8 @@ class ServeState:
     prefill_steps: int = 0
     decode_steps: int = 0
     occupancy: List[float] = field(default_factory=list)
+    #: (rid, token) pairs emitted by the LAST step() — the streaming feed
+    events: List[Tuple[int, int]] = field(default_factory=list)
 
     @property
     def now(self) -> float:
@@ -85,6 +87,10 @@ class ServeResult:
     backend: str = ""
     cached_len: Dict[int, int] = field(default_factory=dict)  # rid -> prefix hit
     prefix: Dict[str, float] = field(default_factory=dict)    # cache stats
+    policy: str = ""                     # scheduling policy name
+    preemptions: int = 0                 # suspends during this trace
+    resumes: int = 0                     # re-admissions of suspended requests
+    deadline_misses: int = 0             # TTFT deadlines blown this trace
 
 
 class Engine:
@@ -395,7 +401,9 @@ class Engine:
                          max_decode_batch: int = 8, key=None,
                          prefix_cache: bool = True,
                          host_tier_blocks: Optional[int] = None,
-                         prefetch_depth: Optional[int] = None) -> ServeState:
+                         prefetch_depth: Optional[int] = None,
+                         policy=None,
+                         max_prefill_rows: Optional[int] = None) -> ServeState:
         """Size the pool/scheduler for a request trace and compile the two
         step functions (static geometry: chunk width, prefill rows, decode
         rows, blocks per request).
@@ -405,7 +413,16 @@ class Engine:
         serving/pool.py) and compiles the step functions with the
         selection-count prefetch oracle; ``prefetch_depth`` caps how many
         host blocks the per-step prefetch hook stages ahead of promotion.
-        Both default from ``QuokaConfig``."""
+        Both default from ``QuokaConfig``.
+
+        ``policy`` (None | "fcfs" | "slo" | SchedPolicy) selects the
+        scheduling policy (serving/policy.py); a preempting policy widens
+        the per-request block geometry to the suspend/resume worst case.
+        ``max_prefill_rows`` overrides the compiled prefill-row count
+        (default: the full-chunk capacity ``max_prefill_tokens // chunk``);
+        raise it to let short tail chunks — charged their real length —
+        pack together."""
+        from repro.serving.policy import resolve_policy
         from repro.serving.pool import PagedKVCache, max_blocks_bound
         from repro.serving.scheduler import Scheduler
         chunk = self.model.cfg.quoka.chunk_size
@@ -419,13 +436,17 @@ class Engine:
                 f"(serving/pool.py::gather_blocks), which needs the plan "
                 f"grid to divide the pool grid")
         max_prefill_tokens = max_prefill_tokens or 4 * chunk
+        pol = resolve_policy(policy)
         align = self.prefix_align() if prefix_cache else chunk
         max_nb = max(max_blocks_bound(r.prompt_len, r.max_new, chunk,
-                                      block_size, align=align)
+                                      block_size, align=align,
+                                      preempt=pol.may_preempt)
                      for r in requests)
         if num_blocks is None:
             num_blocks = max_decode_batch * max_nb    # no contention
-        b_p = max(1, max_prefill_tokens // chunk)
+        b_p = (max(1, max_prefill_tokens // chunk)
+               if max_prefill_rows is None else max(1, int(max_prefill_rows)))
+        rows = b_p                  # scheduler cap (pre mesh-rounding)
         b_d = max_decode_batch
         if self.mesh is not None:
             # the pool's block axis shards over the FSDP axes — round the
@@ -446,9 +467,13 @@ class Engine:
                if prefetch_depth is None else int(prefetch_depth))
         pool = PagedKVCache(self.model, num_blocks, block_size,
                             mesh=self.mesh, host_tier_blocks=htb)
+        # selection methods consume prefill in ``granularity``-sized score
+        # units — that is the finest grid a packed chunk can be charged at
+        grid = 1 if self.method == "full" else max(1, g)
         sched = Scheduler(pool, chunk, max_prefill_tokens, max_decode_batch,
                           prefix_cache=prefix_cache, prefix_align=align,
-                          registry=self.registry)
+                          registry=self.registry, policy=pol,
+                          max_prefill_rows=rows, token_grid=grid)
         fns = self._continuous_fns(block_size, max_nb, b_p, b_d, num_blocks,
                                    sel_on=htb > 0)
         key = key if key is not None else jax.random.PRNGKey(0)
@@ -548,16 +573,20 @@ class Engine:
         """One engine step: admit, run a mixed chunk-prefill step over up to
         ``max_prefill_tokens`` of pending prompt chunks, then a batched
         decode step over every active decode request.  Returns
-        (prefill rows, decode rows) executed."""
+        (prefill rows, decode rows) executed.  ``state.events`` is reset and
+        filled with this step's emitted (rid, token) pairs — the feed
+        ``serve_stream`` yields from."""
         pool, sched = state.pool, state.sched
         reg, obs = self.registry, self._obs_on
-        admitted = sched.admit()
+        state.events = []
+        admitted = sched.admit(state.now)
         if obs:
             now = state.now
             for r in admitted:
                 reg.observe("sched/admission_wait_s",
                             max(0.0, now - r.arrival_s))
             reg.set("sched/queue_depth", float(len(sched.waiting)))
+            reg.set("sched/suspended", float(len(sched.suspended)))
             reg.set("sched/active", float(sched.n_active))
             reg.set("pool/occupancy", 1.0 - pool.num_free / pool.num_blocks)
             reg.set("pool/cached_blocks", float(pool.num_cached))
@@ -567,7 +596,7 @@ class Engine:
             self._host_counters(state)
         sel_at = 2 + (1 if obs else 0)     # extra-output slot (host tier)
 
-        rows = sched.pack_prefill()
+        rows = sched.pack_prefill(state.now)
         if rows:
             tokens = np.zeros((state.b_prefill, state.chunk), np.int32)
             start = np.zeros((state.b_prefill,), np.int32)
@@ -595,7 +624,9 @@ class Engine:
                 self._note_hot(state, out[sel_at], len(rows))
             now = state.now
             for i, (r, ch, st, vl) in enumerate(rows):
-                sched.note_prefilled(r, vl, int(tok_np[i]), now)
+                ev = sched.note_prefilled(r, vl, int(tok_np[i]), now)
+                if ev is not None:
+                    state.events.append((r.rid, ev))
             state.prefill_steps += 1
 
         drows = sched.pack_decode()
@@ -621,7 +652,9 @@ class Engine:
                 self._note_hot(state, out[sel_at], len(drows))
             now = state.now
             for i, r in enumerate(drows):
-                sched.note_decoded(r, int(tok_np[i]), now)
+                state.events.append((r.rid,
+                                     sched.note_decoded(r, int(tok_np[i]),
+                                                        now)))
             # occupancy over the SCHEDULER's slot bound (the compiled row
             # batch may carry mesh-rounding padding rows)
             state.occupancy.append(len(drows) / sched.max_decode_batch)
@@ -630,31 +663,28 @@ class Engine:
         state.steps += 1
         return len(rows), len(drows)
 
-    def serve(self, requests: Sequence, *, block_size: Optional[int] = None,
-              num_blocks: Optional[int] = None,
-              max_prefill_tokens: Optional[int] = None,
-              max_decode_batch: Optional[int] = None, key=None,
-              prefix_cache: Optional[bool] = None,
-              host_tier_blocks: Optional[int] = None,
-              prefetch_depth: Optional[int] = None,
-              state: Optional[ServeState] = None) -> ServeResult:
-        """Serve a request trace with continuous batching.
+    def serve_stream(self, requests: Sequence, *,
+                     block_size: Optional[int] = None,
+                     num_blocks: Optional[int] = None,
+                     max_prefill_tokens: Optional[int] = None,
+                     max_decode_batch: Optional[int] = None, key=None,
+                     prefix_cache: Optional[bool] = None,
+                     host_tier_blocks: Optional[int] = None,
+                     prefetch_depth: Optional[int] = None,
+                     policy=None, max_prefill_rows: Optional[int] = None,
+                     state: Optional[ServeState] = None):
+        """Streaming front-end of ``serve``: a generator yielding
+        ``(rid, token)`` the step each token is emitted (the first token of
+        a request right after its prefill completes, then one per decode
+        step).  The generator's return value is the full ``ServeResult`` —
+        ``serve()`` is exactly a drain of this stream.
 
-        ``requests``: serving.request.Request objects (arrival_s offsets
-        are honoured against the wall clock).  Each engine step packs up to
-        ``max_prefill_tokens`` of pending prompt chunks plus every active
-        decode token; admission is FCFS against pool capacity and the
-        ``max_decode_batch`` batch-slot bound.  Greedy outputs are
-        token-identical to per-request ``generate`` (tests/test_scheduler),
-        including requests admitted via a prefix-cache hit
-        (tests/test_prefix_cache).
-
-        ``prefix_cache`` (default on) shares identical prompt prefixes
-        across requests through the paged pool (multi-turn chats / shared
-        system prompts skip re-prefilling cached blocks).  Pass a ``state``
-        from ``make_serve_state`` to serve several traces over one warm
-        pool — cached blocks of earlier traces stay matchable — as long as
-        the new requests fit the compiled geometry."""
+        The idle wait is wakeup-correct for streaming consumers: the sleep
+        until the next arrival is recomputed from the CURRENT clock every
+        time the loop re-enters (a consumer may hold the generator between
+        yields for arbitrarily long), and is capped at 0.25 s so a request
+        arriving while the consumer processes tokens is admitted promptly
+        rather than after a stale full-length sleep."""
         requests = list(requests)
         if not requests:
             return ServeResult({}, {}, {}, 0.0, 0, 0.0,
@@ -668,16 +698,18 @@ class Engine:
                 prefix_cache=(True if prefix_cache is None
                               else prefix_cache),
                 host_tier_blocks=host_tier_blocks,
-                prefetch_depth=prefetch_depth)
+                prefetch_depth=prefetch_depth, policy=policy,
+                max_prefill_rows=max_prefill_rows)
         elif (block_size is not None or num_blocks is not None
               or max_prefill_tokens is not None or key is not None
               or max_decode_batch is not None or prefix_cache is not None
-              or host_tier_blocks is not None or prefetch_depth is not None):
+              or host_tier_blocks is not None or prefetch_depth is not None
+              or policy is not None or max_prefill_rows is not None):
             # silently ignoring these would e.g. report cache-on numbers
             # for a prefix_cache=False A/B pass over a warm state
             raise ValueError(
-                "serve(state=...) reuses the state's compiled geometry and "
-                "cache configuration; pass these options to "
+                "serve(state=...) reuses the state's compiled geometry, "
+                "cache configuration and policy; pass these options to "
                 "make_serve_state instead")
         sched = state.sched
         if sched.pending():
@@ -685,7 +717,8 @@ class Engine:
         from repro.serving.pool import max_blocks_bound
         need = max(max_blocks_bound(r.prompt_len, r.max_new, state.chunk,
                                     state.pool.block_size,
-                                    align=sched.prefix_align)
+                                    align=sched.prefix_align,
+                                    preempt=sched.policy.may_preempt)
                    for r in requests)
         if need > state.max_nb:
             raise ValueError(
@@ -697,11 +730,13 @@ class Engine:
         sched.done = []                     # per-trace completion list
         state.steps = state.prefill_steps = state.decode_steps = 0
         state.occupancy = []
+        state.events = []
         pool = state.pool
         prefix0 = (pool.lookups, pool.hit_requests, pool.hit_tokens,
                    pool.prompt_tokens, pool.evictions, pool.cow_copies,
                    pool.demoted, pool.promoted, pool.host_evictions,
                    pool.staged_used)
+        sched0 = (sched.preemptions, sched.resumes, sched.deadline_misses)
         pending = sorted(requests, key=lambda r: r.arrival_s)
         state.t0 = time.perf_counter()
         while pending or sched.pending():
@@ -721,6 +756,8 @@ class Engine:
             if n_pf == 0 and n_dec == 0 and sched.pending():
                 raise RuntimeError(
                     "scheduler stall: pending requests but nothing packed")
+            for ev in state.events:
+                yield ev
 
         wall = state.now
         pool.check_invariants()
@@ -758,10 +795,12 @@ class Engine:
             for r in done:
                 if r.ttft_s is not None:
                     reg.observe("serve/ttft_s", r.ttft_s)
+                    reg.observe(f"tenant/{r.tenant}/ttft_s", r.ttft_s)
                 dec = len(r.out) - 1
                 if dec > 0 and r.done_s is not None and r.ttft_s is not None:
-                    reg.observe("serve/tpot_s",
-                                (r.done_s - r.arrival_s - r.ttft_s) / dec)
+                    tpot = (r.done_s - r.arrival_s - r.ttft_s) / dec
+                    reg.observe("serve/tpot_s", tpot)
+                    reg.observe(f"tenant/{r.tenant}/tpot_s", tpot)
             reg.count("serve/requests_finished", float(len(done)))
             reg.count("serve/tokens_generated", float(generated))
             reg.event("serve_done", wall_s=wall, requests=len(done),
@@ -784,4 +823,53 @@ class Engine:
                        if state.occupancy else 0.0),
             method=self.method, backend=self.backend,
             cached_len={r.rid: r.cached_len for r in done},
-            prefix=dict(self.stats))
+            prefix=dict(self.stats),
+            policy=sched.policy.name,
+            preemptions=sched.preemptions - sched0[0],
+            resumes=sched.resumes - sched0[1],
+            deadline_misses=sched.deadline_misses - sched0[2])
+
+    def serve(self, requests: Sequence, *, block_size: Optional[int] = None,
+              num_blocks: Optional[int] = None,
+              max_prefill_tokens: Optional[int] = None,
+              max_decode_batch: Optional[int] = None, key=None,
+              prefix_cache: Optional[bool] = None,
+              host_tier_blocks: Optional[int] = None,
+              prefetch_depth: Optional[int] = None,
+              policy=None, max_prefill_rows: Optional[int] = None,
+              state: Optional[ServeState] = None) -> ServeResult:
+        """Serve a request trace with continuous batching.
+
+        ``requests``: serving.request.Request objects (arrival_s offsets
+        are honoured against the wall clock).  Each engine step packs up to
+        ``max_prefill_tokens`` of pending prompt chunks plus every active
+        decode token; admission ordering, prefill-packing order and
+        preemption are delegated to ``policy`` (serving/policy.py — FCFS
+        head-of-line by default, "slo" for EDF + weighted fairness +
+        decode preemption) against pool capacity and the
+        ``max_decode_batch`` batch-slot bound.  Greedy outputs under the
+        default policy are token-identical to per-request ``generate``
+        (tests/test_scheduler), including requests admitted via a
+        prefix-cache hit (tests/test_prefix_cache).
+
+        ``prefix_cache`` (default on) shares identical prompt prefixes
+        across requests through the paged pool (multi-turn chats / shared
+        system prompts skip re-prefilling cached blocks).  Pass a ``state``
+        from ``make_serve_state`` to serve several traces over one warm
+        pool — cached blocks of earlier traces stay matchable — as long as
+        the new requests fit the compiled geometry.
+
+        This is a drain of ``serve_stream``; use that directly to consume
+        ``(rid, token)`` pairs as they are emitted."""
+        stream = self.serve_stream(
+            requests, block_size=block_size, num_blocks=num_blocks,
+            max_prefill_tokens=max_prefill_tokens,
+            max_decode_batch=max_decode_batch, key=key,
+            prefix_cache=prefix_cache, host_tier_blocks=host_tier_blocks,
+            prefetch_depth=prefetch_depth, policy=policy,
+            max_prefill_rows=max_prefill_rows, state=state)
+        while True:
+            try:
+                next(stream)
+            except StopIteration as stop:
+                return stop.value

@@ -92,21 +92,50 @@ def blocks_for_request(prompt_len: int, max_new: int, chunk_size: int,
     return -(-span // block_size)
 
 
+def blocks_for_resume(kv_len: int, prompt_len: int, max_new: int,
+                      chunk_size: int, block_size: int,
+                      cached_len: int) -> int:
+    """Blocks reserved when re-admitting a SUSPENDED request: the replay
+    chunks (if any KV was evicted between suspend and resume) span from
+    ``cached_len`` to ``kv_len`` on the chunk grid, and the table must
+    still cover the request's full prompt + max_new token span."""
+    span = kv_len if cached_len >= kv_len else \
+        cached_len + -(-(kv_len - cached_len) // chunk_size) * chunk_size
+    span = max(span, prompt_len + max_new)
+    return -(-span // block_size)
+
+
 def max_blocks_bound(prompt_len: int, max_new: int, chunk_size: int,
-                     block_size: int, align: int = 0) -> int:
+                     block_size: int, align: int = 0,
+                     preempt: bool = False) -> int:
     """Upper bound of ``blocks_for_request`` over every admissible
     ``cached_len`` (static jit geometry must cover the worst case).
 
     ``align`` is the prefix-hit granularity: when it is a multiple of the
     chunk size the chunk grid never shifts and the cold bound holds; token
     granularity (align=1, dense attention) can shift the last chunk to
-    start at prompt_len - 1."""
+    start at prompt_len - 1.
+
+    ``preempt``: the policy may suspend/resume this request mid-decode, so
+    the bound must also cover the worst ``blocks_for_resume`` — a resume
+    with the KV grown to ``prompt_len + max_new - 1`` tokens and the least
+    favourable surviving-cache offset."""
     worst = 0 if (align and align % chunk_size == 0) \
         else max(0, prompt_len - 1)
-    return max(blocks_for_request(prompt_len, max_new, chunk_size,
-                                  block_size),
-               blocks_for_request(prompt_len, max_new, chunk_size,
-                                  block_size, cached_len=worst))
+    bound = max(blocks_for_request(prompt_len, max_new, chunk_size,
+                                   block_size),
+                blocks_for_request(prompt_len, max_new, chunk_size,
+                                   block_size, cached_len=worst))
+    if preempt:
+        kv = prompt_len + max(0, max_new - 1)
+        worst_r = 0 if (align and align % chunk_size == 0) \
+            else max(0, kv - 1)
+        bound = max(bound,
+                    blocks_for_resume(kv, prompt_len, max_new, chunk_size,
+                                      block_size, 0),
+                    blocks_for_resume(kv, prompt_len, max_new, chunk_size,
+                                      block_size, worst_r))
+    return bound
 
 
 def _chain_hashes(tokens: np.ndarray, block_size: int) -> List[int]:
@@ -353,22 +382,26 @@ class PagedKVCache:
         self._tables[rid] = table + rest
         return self._tables[rid]
 
-    def free(self, rid: int) -> None:
+    def free(self, rid: int) -> List[int]:
         """Release a request's blocks.  Registered blocks stay resident on
         the LRU list (matchable until evicted); the rest are pos=-1-stamped
-        so no stale KV can leak into a later allocation."""
+        so no stale KV can leak into a later allocation.  Returns the
+        blocks that landed on the LRU list (the suspend path demotes
+        exactly those)."""
         blocks = self._tables.pop(rid)   # KeyError on double free
-        stale = []
+        stale, retained = [], []
         for b in blocks:
             self._ref[b] -= 1
             if self._ref[b] == 0:
                 del self._ref[b]
                 if b in self._reg:
                     self._lru[b] = None          # MRU end, content kept
+                    retained.append(b)
                 else:
                     stale.append(b)
                     self._free.append(b)
         self._stamp(stale)
+        return retained
 
     def table(self, rid: int) -> List[int]:
         return self._tables[rid]
@@ -466,6 +499,76 @@ class PagedKVCache:
                               (self._tail, self._h_tail)):
                 for hh in [hh for hh in hmap if hh in idx]:
                     self._h_unregister(hmap[hh])
+
+    def register_suspend(self, rid: int, tokens: np.ndarray) -> None:
+        """Content-address request ``rid``'s blocks over ``tokens`` — the
+        prompt PLUS the generated tokens whose KV the cache holds — before
+        suspension releases them.  Unlike ``register_prefix`` this must
+        UPGRADE stale registrations: decode may have grown a registered
+        partial tail (same block, more valid tokens) or filled it into a
+        full block (tail registration replaced by a full-chain one)."""
+        toks = np.asarray(tokens).reshape(-1)
+        bs = self.block_size
+        table = self._tables[rid]
+        chain = _chain_hashes(toks, bs)
+        h = _HASH_SEED
+        for i, h2 in enumerate(chain):
+            h = h2
+            b = table[i]
+            reg = self._reg.get(b)
+            if reg is not None and reg[0] == "tail":
+                # decode filled this once-partial tail into a full block
+                self._unregister(b)
+                reg = None
+            if reg is not None or h in self._full:
+                continue                 # shared / duplicate content
+            self._reg[b] = ("full", h)
+            self._full[h] = b
+        rem = len(toks) % bs
+        if rem:
+            tb = table[len(toks) // bs]
+            t_toks = tuple(map(int, toks[len(toks) - rem:]))
+            cur = self._reg.get(tb)
+            if cur is not None and cur[0] == "tail" and cur[1] == h \
+                    and self._tail.get(h) == tb:
+                if len(cur[2]) < rem:    # decode extended the tail
+                    self._reg[tb] = ("tail", h, t_toks)
+            elif cur is None and h not in self._tail:
+                self._reg[tb] = ("tail", h, t_toks)
+                self._tail[h] = tb
+        if self.host is not None:
+            for idx, hmap in ((self._full, self._h_full),
+                              (self._tail, self._h_tail)):
+                for hh in [hh for hh in hmap if hh in idx]:
+                    self._h_unregister(hmap[hh])
+
+    def suspend(self, rid: int, tokens: np.ndarray) -> Tuple[int, int]:
+        """Preemption: release request ``rid``'s blocks with their KV kept
+        matchable for resume.  ``tokens`` is the prompt plus the generated
+        tokens the cache holds KV for (``Request.kv_len`` of them).  The
+        blocks are content-registered (``register_suspend``) and freed;
+        with the host tier on, the exclusively-owned ones are demoted
+        IMMEDIATELY — suspension's whole point is to free device blocks
+        now, not at the next pressure eviction — while blocks shared with
+        live requests stay pinned on device.  Without a host tier they
+        park on the LRU list (resume re-pins them; pressure in between is
+        real cache loss and forces a replay).  Returns (blocks released
+        from this request's table, blocks demoted to host)."""
+        self.register_suspend(rid, tokens)
+        n_total = len(self._tables[rid])
+        retained = self.free(rid)
+        demoted = 0
+        if self.host is not None:
+            stale = []
+            for b in retained:
+                if b in self._lru and b in self._reg:
+                    del self._lru[b]
+                    self._demote(b)
+                    stale.append(b)
+                    self._free.append(b)
+                    demoted += 1
+            self._stamp(stale)
+        return n_total, demoted
 
     # ---- internals -------------------------------------------------------
     def _pin(self, b: int) -> None:

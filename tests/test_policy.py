@@ -1,0 +1,392 @@
+"""Policy-driven serving control plane: FCFS parity through the policy
+layer, preemption via block suspend/resume (token identity, replay
+fallback), SLO scheduling, streaming serve, and the pack_prefill
+tail-charging fix.  Randomized invariant sweeps guard the scheduler
+mechanics: no request lost or duplicated across admissions, suspensions
+and resumptions, and the pool's block accounting stays exact."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.serving import request as rq
+from repro.serving.engine import Engine
+from repro.serving.policy import FCFSPolicy, SLOPolicy, resolve_policy
+from repro.serving.pool import PagedKVCache
+from repro.serving.request import make_requests
+from repro.serving.scheduler import Scheduler
+
+pytestmark = pytest.mark.scheduling
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_config("granite-3-2b").smoke()
+    model = build_model(cfg)
+    return cfg, model, model.init(KEY)
+
+
+def _drive(eng, state, reqs, *, hook=None, max_steps=500):
+    """Manually run engine steps to drain ``reqs`` (arrivals ignored: all
+    added up front).  ``hook(state, step_index)`` runs before each step —
+    the test's handle for forcing suspensions mid-flight."""
+    sched = state.sched
+    for r in reqs:
+        sched.add(r)
+    steps = 0
+    while sched.pending():
+        if hook is not None:
+            hook(state, steps)
+        n_pf, n_dec = eng.step(state)
+        assert n_pf or n_dec or not sched.pending(), "scheduler stall"
+        steps += 1
+        assert steps < max_steps, "drive did not drain"
+    state.pool.check_invariants()
+    return {r.rid: np.asarray(r.out, np.int32) for r in sched.done}
+
+
+# ---------------------------------------------------------------------------
+# FCFS parity through the policy layer
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method", ["full", "quoka"])
+def test_fcfs_policy_parity_including_prefix_hits(smoke_model, method):
+    """Explicit FCFSPolicy == generate(), token for token — and a second
+    pass over the warm pool (every request admitted via a prefix-cache hit)
+    emits the same tokens again."""
+    cfg, model, p = smoke_model
+    eng = Engine(model, p, method=method)
+    rng = np.random.default_rng(21)
+    # lengths chosen so the hot pass hits under BOTH methods: quoka floors
+    # a hit to the chunk grid AND caps at prompt_len - 1, so an exact
+    # one-chunk prompt (16) would floor to a miss
+    prompts = [rng.integers(3, cfg.vocab, (n,)).astype(np.int32)
+               for n in (17, 48, 24)]
+    refs = [eng.generate(eng.pad_prompt(pr[None]), 5).tokens[0]
+            for pr in prompts]
+    kw = dict(block_size=16, max_decode_batch=3, max_prefill_tokens=32)
+    state = eng.make_serve_state(make_requests(prompts, 5),
+                                 policy=FCFSPolicy(), **kw)
+    cold = eng.serve(make_requests(prompts, 5), state=state)
+    hot = eng.serve(make_requests(prompts, 5), state=state)
+    assert cold.policy == "fcfs" and cold.preemptions == 0
+    assert eng.stats["cache_hits"] == len(prompts)   # hot pass all hits
+    for i, ref in enumerate(refs):
+        np.testing.assert_array_equal(cold.tokens[i], ref)
+        np.testing.assert_array_equal(hot.tokens[i], ref)
+
+
+# ---------------------------------------------------------------------------
+# suspend / resume
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method", ["full", "quoka"])
+@pytest.mark.parametrize("host_tier", [0, 32])
+def test_suspend_resume_token_identity(smoke_model, method, host_tier):
+    """Preempting a decoding request and resuming it (KV preserved — on the
+    LRU list or demoted to the host tier) yields the exact tokens of an
+    uninterrupted run, for dense and selection methods alike."""
+    cfg, model, p = smoke_model
+    eng = Engine(model, p, method=method)
+    rng = np.random.default_rng(23)
+    prompt = rng.integers(3, cfg.vocab, (40,)).astype(np.int32)
+    kw = dict(block_size=16, max_decode_batch=2,
+              policy=SLOPolicy(), host_tier_blocks=host_tier)
+    state = eng.make_serve_state(make_requests([prompt], 8), **kw)
+    ref = _drive(eng, state, make_requests([prompt], 8))[0]
+
+    state = eng.make_serve_state(make_requests([prompt], 8), **kw)
+    forced = []
+
+    def force_suspend(st, step):
+        r = st.sched.decoding[0] if st.sched.decoding else None
+        if not forced and r is not None and len(r.out) >= 3:
+            st.sched.suspend(r, st.now)
+            forced.append(r)
+
+    out = _drive(eng, state, make_requests([prompt], 8),
+                 hook=force_suspend)[0]
+    assert forced and forced[0].preemptions == 1
+    assert state.sched.resumes == 1
+    if host_tier:
+        assert state.pool.demoted > 0 and state.pool.promoted > 0
+    else:
+        assert state.sched.resume_replays == 0   # KV intact on the LRU
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_resume_replays_after_cache_loss(smoke_model):
+    """If the suspended KV is evicted before resume, the scheduler replays
+    the lost suffix through prefill chunks — exact for ``full`` (dense
+    attention is chunking-invariant)."""
+    cfg, model, p = smoke_model
+    eng = Engine(model, p, method="full")
+    rng = np.random.default_rng(29)
+    prompt = rng.integers(3, cfg.vocab, (40,)).astype(np.int32)
+    kw = dict(block_size=16, max_decode_batch=2, policy=SLOPolicy())
+    state = eng.make_serve_state(make_requests([prompt], 8), **kw)
+    ref = _drive(eng, state, make_requests([prompt], 8))[0]
+
+    state = eng.make_serve_state(make_requests([prompt], 8), **kw)
+    forced = []
+
+    def suspend_then_trash(st, step):
+        sched, pool = st.sched, st.pool
+        if not forced and sched.decoding and len(sched.decoding[0].out) >= 3:
+            sched.suspend(sched.decoding[0], st.now)
+            # evict the parked KV: grab every free + evictable block, then
+            # release — the registered suspend blocks are destroyed
+            n = len(pool._free) + len(pool._lru)
+            pool.alloc(10_000, n)
+            pool.free(10_000)
+            forced.append(True)
+
+    out = _drive(eng, state, make_requests([prompt], 8),
+                 hook=suspend_then_trash)[0]
+    assert forced and state.sched.resumes == 1
+    assert state.sched.resume_replays == 1       # cache loss -> replay
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_randomized_suspend_resume_invariants(smoke_model):
+    """Random preemptions across a multi-request trace: every request
+    finishes exactly once with exactly max_new tokens, and the pool's
+    refcount/free-list/registration invariants hold at every step."""
+    cfg, model, p = smoke_model
+    eng = Engine(model, p, method="quoka")
+    rng = np.random.default_rng(31)
+    prompts = [rng.integers(3, cfg.vocab, (int(n),)).astype(np.int32)
+               for n in rng.integers(8, 48, 6)]
+    reqs = make_requests(prompts, 5)
+    state = eng.make_serve_state(reqs, block_size=16, max_decode_batch=3,
+                                 policy=SLOPolicy())
+
+    def random_suspend(st, step):
+        sched = st.sched
+        if sched.decoding and rng.random() < 0.3:
+            victim = sched.decoding[int(rng.integers(len(sched.decoding)))]
+            if victim.out:                       # decode_pos needs one token
+                sched.suspend(victim, st.now)
+        st.pool.check_invariants()
+
+    out = _drive(eng, state, reqs, hook=random_suspend, max_steps=2000)
+    assert sorted(out) == list(range(len(prompts)))      # none lost/duped
+    assert all(len(v) == 5 for v in out.values())
+    assert len(state.sched.done) == len(prompts)         # finished ONCE each
+    assert not state.sched.waiting and not state.sched.suspended
+
+
+def test_slo_policy_preempts_for_deadline(smoke_model):
+    """One decode slot, a long background decode, then an interactive
+    deadline-carrying arrival: SLOPolicy suspends the background request to
+    admit the interactive one; FCFS on the same trace never preempts."""
+    cfg, model, p = smoke_model
+    rng = np.random.default_rng(37)
+    bg = rng.integers(3, cfg.vocab, (32,)).astype(np.int32)
+    inter = rng.integers(3, cfg.vocab, (16,)).astype(np.int32)
+
+    def reqs():
+        return make_requests(
+            [bg, inter], [64, 2], arrivals=[0.0, 0.02],
+            tenants=["background", "interactive"],
+            ttft_deadlines=[None, 0.01])
+
+    eng = Engine(model, p, method="full")
+    kw = dict(block_size=16, max_decode_batch=1, max_prefill_tokens=32)
+    fcfs = eng.serve(reqs(), policy="fcfs", **kw)
+    eng.serve(reqs(), policy="slo", **kw)            # compile warmup (slo
+    slo = eng.serve(reqs(), policy="slo", **kw)      # geometry is wider)
+    assert fcfs.preemptions == 0
+    assert slo.preemptions >= 1 and slo.resumes >= 1
+    assert slo.policy == "slo"
+    # every request still completes in full on both arms
+    for res in (fcfs, slo):
+        assert len(res.tokens[0]) == 64 and len(res.tokens[1]) == 2
+    # the interactive request stopped waiting behind the background decode
+    assert slo.ttft_s[1] < fcfs.ttft_s[1]
+
+
+# ---------------------------------------------------------------------------
+# pack_prefill tail charging (satellite bugfix)
+# ---------------------------------------------------------------------------
+def test_pack_prefill_charges_real_tail_length(smoke_model):
+    """Two short tail chunks must pack into ONE step when the row geometry
+    allows it: each charges its real (grid-rounded) length, not a whole
+    padded chunk of the token budget."""
+    cfg, model, p = smoke_model
+    pool = PagedKVCache(model, num_blocks=8, block_size=16)
+    reqs = make_requests([np.arange(5, dtype=np.int32) + 3,
+                          np.arange(6, dtype=np.int32) + 3], 2)
+    sched = Scheduler(pool, chunk_size=16, max_prefill_tokens=16,
+                      max_decode_batch=2, max_prefill_rows=2)
+    for r in reqs:
+        sched.add(r)
+    sched.admit()
+    rows = sched.pack_prefill()
+    assert len(rows) == 2                      # both tails in one step
+    assert [vl for _, _, _, vl in rows] == [5, 6]
+
+    # control: the default row geometry (budget // chunk == 1 row) keeps
+    # the old one-chunk-per-step packing
+    pool2 = PagedKVCache(model, num_blocks=8, block_size=16)
+    sched2 = Scheduler(pool2, chunk_size=16, max_prefill_tokens=16,
+                       max_decode_batch=2)
+    for r in make_requests([np.arange(5, dtype=np.int32) + 3,
+                            np.arange(6, dtype=np.int32) + 3], 2):
+        sched2.add(r)
+    sched2.admit()
+    assert len(sched2.pack_prefill()) == 1
+
+
+def test_tail_packing_end_to_end(smoke_model):
+    """Engine-level: with ``max_prefill_rows=2`` and a one-chunk token
+    budget, two sub-chunk prompts prefill in a single engine step — and
+    still match generate() token for token."""
+    cfg, model, p = smoke_model
+    chunk = cfg.quoka.chunk_size
+    eng = Engine(model, p, method="full")
+    rng = np.random.default_rng(41)
+    prompts = [rng.integers(3, cfg.vocab, (chunk // 2 - 1,)).astype(np.int32),
+               rng.integers(3, cfg.vocab, (chunk // 2,)).astype(np.int32)]
+    refs = [eng.generate(eng.pad_prompt(pr[None]), 4).tokens[0]
+            for pr in prompts]
+    res = eng.serve(make_requests(prompts, 4), block_size=16,
+                    max_decode_batch=2, max_prefill_tokens=chunk,
+                    max_prefill_rows=2)
+    assert res.prefill_steps == 1, res.prefill_steps
+    for i, ref in enumerate(refs):
+        np.testing.assert_array_equal(res.tokens[i], ref)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous make_requests (satellite)
+# ---------------------------------------------------------------------------
+def test_make_requests_heterogeneous_fields(smoke_model):
+    cfg, model, p = smoke_model
+    rng = np.random.default_rng(43)
+    prompts = [rng.integers(3, cfg.vocab, (16,)).astype(np.int32)
+               for _ in range(2)]
+    reqs = make_requests(prompts, [2, 5], eos_id=[None, 7],
+                         tenants=["a", "b"], priorities=[0, 3],
+                         ttft_deadlines=[None, 1.5])
+    assert [r.max_new for r in reqs] == [2, 5]
+    assert [r.eos_id for r in reqs] == [None, 7]
+    assert [r.tenant for r in reqs] == ["a", "b"]
+    assert [r.priority for r in reqs] == [0, 3]
+    assert [r.ttft_deadline_s for r in reqs] == [None, 1.5]
+    with pytest.raises(ValueError, match="max_new"):
+        make_requests(prompts, [2])
+    # per-request max_new is honoured end to end
+    eng = Engine(model, p, method="full")
+    res = eng.serve(make_requests(prompts, [2, 5]), block_size=16,
+                    max_decode_batch=2)
+    assert len(res.tokens[0]) == 2 and len(res.tokens[1]) == 5
+
+
+# ---------------------------------------------------------------------------
+# deadlines + per-tenant telemetry
+# ---------------------------------------------------------------------------
+def test_deadline_miss_counters_and_tenant_views(smoke_model):
+    from repro.obs import Registry
+    cfg, model, p = smoke_model
+    reg = Registry()
+    eng = Engine(model, p, method="full", registry=reg)
+    rng = np.random.default_rng(47)
+    prompts = [rng.integers(3, cfg.vocab, (16,)).astype(np.int32)
+               for _ in range(2)]
+    res = eng.serve(
+        make_requests(prompts, 2, tenants=["t0", "t1"],
+                      ttft_deadlines=[0.0, 1e9]),     # t0 cannot make 0 s
+        block_size=16, max_decode_batch=2)
+    assert res.deadline_misses == 1
+    assert reg.counters["serve/deadline_miss"].value == 1
+    assert reg.counters["tenant/t0/deadline_miss"].value == 1
+    assert reg.counters["tenant/t1/deadline_met"].value == 1
+    t0 = reg.view("tenant/t0")
+    assert "deadline_miss" in t0 and "ttft_s" not in reg.counters
+
+
+# ---------------------------------------------------------------------------
+# streaming serve
+# ---------------------------------------------------------------------------
+def test_serve_stream_yields_per_step(smoke_model):
+    """serve_stream yields every (rid, token) pair as it is emitted; the
+    drained stream's return value is the full ServeResult and matches what
+    the yielded events reconstruct."""
+    cfg, model, p = smoke_model
+    eng = Engine(model, p, method="full")
+    rng = np.random.default_rng(53)
+    prompts = [rng.integers(3, cfg.vocab, (n,)).astype(np.int32)
+               for n in (16, 24)]
+    kw = dict(block_size=16, max_decode_batch=2)
+    eng.serve(make_requests(prompts, 4), **kw)          # compile warmup
+    stream = eng.serve_stream(make_requests(prompts, 4), **kw)
+    events, res = [], None
+    while True:
+        try:
+            events.append(next(stream))
+        except StopIteration as stop:
+            res = stop.value
+            break
+    assert res is not None and res.generated == len(events) == 8
+    by_rid = {}
+    for rid, tok in events:
+        by_rid.setdefault(rid, []).append(tok)
+    for rid, toks in by_rid.items():
+        np.testing.assert_array_equal(np.asarray(toks, np.int32),
+                                      res.tokens[rid])
+
+
+def test_serve_is_a_stream_drain(smoke_model):
+    """serve() and a manual serve_stream drain produce identical tokens
+    (greedy) for the same trace."""
+    cfg, model, p = smoke_model
+    eng = Engine(model, p, method="full")
+    rng = np.random.default_rng(59)
+    prompts = [rng.integers(3, cfg.vocab, (16,)).astype(np.int32)]
+    kw = dict(block_size=16, max_decode_batch=1)
+    r1 = eng.serve(make_requests(prompts, 4), **kw)
+    r2_stream = eng.serve_stream(make_requests(prompts, 4), **kw)
+    toks = [t for _, t in r2_stream]
+    np.testing.assert_array_equal(np.asarray(toks, np.int32), r1.tokens[0])
+
+
+# ---------------------------------------------------------------------------
+# policy resolution
+# ---------------------------------------------------------------------------
+def test_resolve_policy():
+    assert isinstance(resolve_policy(None), FCFSPolicy)
+    assert resolve_policy("slo").name == "slo"
+    pol = SLOPolicy(weights={"a": 2.0})
+    assert resolve_policy(pol) is pol
+    with pytest.raises(ValueError, match="unknown scheduling policy"):
+        resolve_policy("nope")
+    with pytest.raises(TypeError):
+        resolve_policy(7)
+
+
+def test_slo_policy_ordering_and_victims():
+    mk = lambda rid, arr, dl, pr=0, tenant="t": rq.Request(
+        rid=rid, tokens=np.zeros(4, np.int32), max_new=4, arrival_s=arr,
+        ttft_deadline_s=dl, priority=pr, tenant=tenant)
+    pol = SLOPolicy(risk_frac=0.0)
+    a = mk(0, 0.0, None)          # no deadline -> least urgent
+    b = mk(1, 0.1, 0.5)           # deadline 0.6
+    c = mk(2, 0.0, 0.3)           # deadline 0.3 -> most urgent
+    assert [r.rid for r in pol.order_admission([], [a, b, c], 1.0)] \
+        == [2, 1, 0]
+    # victims must hold a STRICTLY later deadline than the blocked request
+    d1, d2 = mk(3, 0.0, None), mk(4, 0.0, 0.3)
+    d1.status = d2.status = rq.DECODE
+    d1.out, d2.out = [1, 2, 3], [1]
+    assert pol.pick_victim(c, [d1, d2], now=1.0) is d1    # equal dl excluded
+    assert pol.pick_victim(c, [d2], now=1.0) is None
+    assert pol.pick_victim(a, [d1], now=1.0) is None      # no deadline, no risk
+    # fairness: the most-served tenant is sacrificed first
+    pol.note_work(mk(5, 0, None, tenant="fat"), 1000)
+    f1 = mk(6, 0.0, None, tenant="fat")
+    f2 = mk(7, 0.0, None, tenant="thin")
+    f1.status = f2.status = rq.DECODE
+    f1.out = f2.out = [1]
+    assert pol.pick_victim(c, [f2, f1], now=1.0) is f1
